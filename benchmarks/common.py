@@ -1,0 +1,122 @@
+"""Shared benchmark harness for the paper-figure reproductions.
+
+Everything is scaled down from the paper's testbed by ~64x (records,
+memory, log) with the paper's *ratios* preserved: 16KB pages -> 4KB, 1KB
+records -> 256B, T=10, active SSTable 32MB -> 512KB, bloom 10 bits/key,
+clock buffer cache, 95% thresholds. Throughput is the simulated-time proxy
+of repro.core.lsm.storage.TimeModel (NVMe bandwidths + CPU constants
+calibrated to the paper's relative overheads).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.lsm.sstable import partition_run, reset_sst_ids
+from repro.core.lsm.storage import LSMStore, StoreConfig
+
+KB, MB = 1 << 10, 1 << 20
+
+BASE = dict(
+    total_memory_bytes=64 * MB,
+    write_memory_bytes=4 * MB,
+    sim_cache_bytes=1 * MB,
+    page_bytes=4 * KB,
+    entry_bytes=256,
+    size_ratio=10,
+    active_sstable_bytes=256 * KB,
+    sstable_bytes=512 * KB,
+    max_log_bytes=16 * MB,
+)
+
+
+def make_store(**kw) -> LSMStore:
+    reset_sst_ids()
+    cfg = dict(BASE)
+    cfg.update(kw)
+    return LSMStore(StoreConfig(**cfg))
+
+
+def bulk_load(store: LSMStore, tree_name: str, n_records: int,
+              key_stride: int = 1) -> None:
+    """Install n_records directly into the tree's last level (no I/O)."""
+    t = store.trees[tree_name]
+    keys = np.arange(0, n_records * key_stride, key_stride, dtype=np.int64)
+    ssts = partition_run(keys, keys, 0, 0, t.entry_bytes,
+                         store.cfg.page_bytes, store.cfg.sstable_bytes)
+    t.levels.levels = [ssts]
+    t.levels.adjust(store.cfg.active_sstable_bytes)
+
+
+class Workload:
+    """YCSB-like driver: batched mixed ops against one or more trees."""
+
+    def __init__(self, store, trees, key_max, *, zipf_a=0.99,
+                 tree_probs=None, seed=0, scan_len=100):
+        self.store = store
+        self.trees = list(trees)
+        self.key_max = key_max
+        self.scan_len = scan_len
+        self.rng = np.random.default_rng(seed)
+        self.tree_probs = tree_probs
+
+    def _keys(self, n):
+        # bounded zipf(a~1) over the whole keyspace: rank = N^u, then a
+        # multiplicative hash scatters ranks across the key range.
+        u = self.rng.random(n)
+        rank = np.floor(self.key_max ** u).astype(np.int64)
+        return (rank * 2654435761) % self.key_max
+
+    def _tree(self):
+        if self.tree_probs is None:
+            return self.trees[0]
+        return self.trees[self.rng.choice(len(self.trees),
+                                          p=self.tree_probs)]
+
+    def run(self, n_ops, *, write_frac=1.0, scan_frac=0.0, batch=256,
+            on_batch=None):
+        done = 0
+        while done < n_ops:
+            b = min(batch, n_ops - done)
+            tree = self._tree()
+            r = self.rng.random()
+            if r < write_frac:
+                keys = self._keys(b)
+                self.store.write(tree, keys, keys, op=False)
+                self.store.note_ops(b)
+            elif r < write_frac + scan_frac:
+                for lo in self._keys(max(1, b // 16)):
+                    self.store.scan(tree, int(lo), self.scan_len)
+                self.store.note_ops(0)
+            else:
+                for k in self._keys(b):
+                    self.store.lookup(tree, int(k))
+            done += b
+            if on_batch is not None:
+                on_batch(self.store)
+
+
+def measure(store, fn) -> dict:
+    """Run fn() and report deltas: throughput proxy + I/O per op."""
+    store.sync_mem_stats()
+    before = store.disk.stats.copy()
+    fn()
+    store.sync_mem_stats()
+    d = store.disk.stats.delta(before)
+    io, cpu = store.cfg.time_model.elapsed(d, scheme=store.cfg.scheme)
+    ops = max(d.ops, 1)
+    return {
+        "ops": d.ops,
+        "throughput": ops / max(io, cpu, 1e-9),
+        "io_pages_per_op": (d.pages_written + d.pages_read) / ops,
+        "write_pages_per_op": d.pages_written / ops,
+        "read_pages_per_op": d.pages_read / ops,
+        "write_amp": (d.pages_written * store.cfg.page_bytes
+                      / max(d.entries_written * store.cfg.entry_bytes, 1)),
+        "stalls": d.write_stalls,
+        "flushes_log": d.flushes_log,
+        "flushes_mem": d.flushes_mem,
+    }
+
+
+def fmt_row(name: str, value: float, derived: str = "") -> str:
+    return f"{name},{value:.6g},{derived}"

@@ -1,0 +1,56 @@
+"""Fig. 7: single LSM-tree, schemes x workloads x write-memory sizes.
+
+Paper claims validated: Partitioned best on write-dominated workloads;
+B+-static worst (1/8 of write memory); B+-dynamic ~ B+-static-tuned;
+Accordion no better than B+-dynamic; throughput plateaus once flushes are
+log-triggered.
+"""
+from __future__ import annotations
+
+from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
+
+SCHEMES = ["btree-static", "btree-static-tuned", "btree-dynamic",
+           "accordion-index", "accordion-data", "partitioned"]
+WORKLOADS = {"write_only": (1.0, 0.0), "write_heavy": (0.5, 0.0),
+             "read_heavy": (0.05, 0.0), "scan_heavy": (0.05, 0.95)}
+
+
+def one(scheme, workload, write_mem_mb, n_records, read_ops=30_000):
+    wf, sf = WORKLOADS[workload]
+    kw = {}
+    if scheme == "btree-static-tuned":
+        kw = dict(scheme="btree-static", max_active_datasets=1)
+    store = make_store(scheme=kw.get("scheme", scheme),
+                       write_memory_bytes=write_mem_mb * MB,
+                       max_active_datasets=kw.get("max_active_datasets", 8),
+                       flush_policy="lsn")
+    store.create_tree("t")
+    bulk_load(store, "t", n_records)
+    w = Workload(store, ["t"], n_records)
+    if wf >= 0.5:   # write-dominated: push ~16x the write memory through
+        n_ops = int(16 * write_mem_mb * MB / 256 / max(wf, 0.5))
+    else:
+        n_ops = read_ops
+    return measure(store, lambda: w.run(n_ops, write_frac=wf, scan_frac=sf))
+
+
+def run(full: bool = False):
+    rows = []
+    n_recs = 300_000 if full else 150_000
+    mems = [1, 2, 4, 8] if full else [2, 8]
+    wls = list(WORKLOADS) if full else ["write_only", "write_heavy",
+                                        "read_heavy"]
+    for wl in wls:
+        for mem in mems:
+            for scheme in SCHEMES:
+                m = one(scheme, wl, mem, n_recs,
+                        read_ops=30_000 if full else 12_000)
+                rows.append(fmt_row(
+                    f"fig07/{wl}/mem{mem}MB/{scheme}", m["throughput"],
+                    f"io_per_op={m['io_pages_per_op']:.3f};"
+                    f"wamp={m['write_amp']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

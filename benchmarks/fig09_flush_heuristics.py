@@ -1,0 +1,40 @@
+"""Fig. 9: flush strategies for the partitioned memory component.
+
+Paper claims: Round-Robin wins at small write memory (memory-triggered),
+Oldest wins mid-range, Full wins at large memory (log-triggered), and the
+Adaptive heuristic (§4.1.4, beta=0.5) tracks the best of the three.
+"""
+from __future__ import annotations
+
+from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
+
+STRATS = {"round_robin": "partial_rr", "oldest": "partial_oldest",
+          "full": "full", "adaptive": None}
+
+
+def one(strategy, write_mem_mb, n_records=150_000):
+    store = make_store(scheme="partitioned", flush_policy="lsn",
+                       write_memory_bytes=write_mem_mb * MB,
+                       max_log_bytes=8 * MB,
+                       forced_flush_kind=STRATS[strategy])
+    store.create_tree("t")
+    bulk_load(store, "t", n_records)
+    w = Workload(store, ["t"], n_records)
+    n_ops = int(16 * write_mem_mb * MB / 256)
+    return measure(store, lambda: w.run(max(n_ops, 60_000), write_frac=1.0))
+
+
+def run(full: bool = False):
+    mems = [1, 2, 4, 8] if full else [1, 4]
+    rows = []
+    for mem in mems:
+        for strat in STRATS:
+            m = one(strat, mem)
+            rows.append(fmt_row(
+                f"fig09/mem{mem}MB/{strat}", m["throughput"],
+                f"wamp={m['write_amp']:.2f};logf={m['flushes_log']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

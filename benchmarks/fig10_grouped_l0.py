@@ -1,0 +1,35 @@
+"""Fig. 10: L0 structures — Original (recency list) vs Grouped vs
+Greedy-Grouped. Paper claim: Original < Grouped < Greedy-Grouped on write
+throughput (write amplification decreases as the structure exploits
+disjointness and greedy victim selection)."""
+from __future__ import annotations
+
+from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
+
+VARIANTS = {"original": dict(l0_grouped=False, l0_greedy=False),
+            "grouped": dict(l0_grouped=True, l0_greedy=False),
+            "greedy_grouped": dict(l0_grouped=True, l0_greedy=True)}
+
+
+def one(variant, n_records=150_000, write_mem_mb=2):
+    store = make_store(scheme="partitioned", flush_policy="lsn",
+                       write_memory_bytes=write_mem_mb * MB,
+                       l0_target_groups=4, l0_max_groups=4,
+                       **VARIANTS[variant])
+    store.create_tree("t")
+    bulk_load(store, "t", n_records)
+    w = Workload(store, ["t"], n_records)
+    return measure(store, lambda: w.run(140_000, write_frac=1.0))
+
+
+def run(full: bool = False):
+    rows = []
+    for variant in VARIANTS:
+        m = one(variant, 300_000 if full else 150_000)
+        rows.append(fmt_row(f"fig10/{variant}", m["throughput"],
+                            f"wamp={m['write_amp']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

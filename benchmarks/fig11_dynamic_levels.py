@@ -1,0 +1,50 @@
+"""Fig. 11: dynamically adjusting disk levels as the write memory changes.
+
+The write memory alternates between large (1MB) and small (64KB) phases;
+`dynamic` adjusts the level count (§4.1.3, f=1.5), the static baselines fix
+it for one of the extremes. Paper claim: dynamic >= both statics in every
+phase; static-large is much worse in the small-memory phase.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import KB, MB, Workload, bulk_load, fmt_row, make_store, measure
+
+
+def one(mode, n_records=150_000, phases=4, ops_per_phase=40_000):
+    kw = {}
+    if mode == "dynamic":
+        kw = dict(dynamic_levels=True)
+    else:
+        # static level count chosen for the given write-memory size
+        storage = n_records * 256
+        mem = 1 * MB if mode == "static-large" else 64 * KB
+        n = max(1, int(np.ceil(np.log10(storage / mem))))
+        kw = dict(dynamic_levels=False, static_num_levels=n)
+    store = make_store(scheme="partitioned", flush_policy="lsn",
+                       write_memory_bytes=1 * MB, max_log_bytes=8 * MB, **kw)
+    store.create_tree("t")
+    bulk_load(store, "t", n_records)
+    w = Workload(store, ["t"], n_records)
+    thr = []
+    for ph in range(phases):
+        store.set_write_memory(1 * MB if ph % 2 == 0 else 64 * KB)
+        m = measure(store, lambda: w.run(ops_per_phase, write_frac=1.0))
+        thr.append(m["throughput"])
+    return thr
+
+
+def run(full: bool = False):
+    rows = []
+    phases = 6 if full else 4
+    for mode in ["dynamic", "static-large", "static-small"]:
+        thr = one(mode, phases=phases)
+        hm = len(thr) / sum(1.0 / max(t, 1e-9) for t in thr)
+        rows.append(fmt_row(f"fig11/{mode}", hm,
+                            "phases=" + "|".join(f"{t:.0f}" for t in thr)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

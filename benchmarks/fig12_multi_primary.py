@@ -1,0 +1,74 @@
+"""Fig. 12: multiple primary LSM-trees under a hotspot distribution.
+
+(a) write-memory sweep at 80-20 skew; (b) skew sweep at fixed memory.
+Paper claims: B+-static thrashes (worst); dynamic schemes win; min-LSN ~
+optimal > max-memory; Partitioned > B+-dynamic under the same policy, and
+the gaps grow with skew.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
+
+N_TREES = 10
+
+
+def tree_probs(skew):
+    """'80-20': 80% of writes to 20% of the trees."""
+    hot_frac, hot_trees = skew
+    n_hot = max(1, int(round(N_TREES * hot_trees)))
+    p = np.full(N_TREES, (1 - hot_frac) / (N_TREES - n_hot))
+    p[:n_hot] = hot_frac / n_hot
+    return p
+
+
+SCHEMES = [("btree-static", "lsn", "b+static"),
+           ("btree-static-tuned", "lsn", "b+static-tuned"),
+           ("btree-dynamic", "mem", "b+dyn-MEM"),
+           ("btree-dynamic", "lsn", "b+dyn-LSN"),
+           ("btree-dynamic", "opt", "b+dyn-OPT"),
+           ("partitioned", "mem", "part-MEM"),
+           ("partitioned", "lsn", "part-LSN"),
+           ("partitioned", "opt", "part-OPT")]
+
+
+def one(scheme, policy, skew, write_mem_mb, n_records=40_000,
+        n_ops=150_000):
+    real = "btree-static" if scheme == "btree-static-tuned" else scheme
+    store = make_store(scheme=real, flush_policy=policy,
+                       write_memory_bytes=write_mem_mb * MB,
+                       max_log_bytes=8 * MB,
+                       max_active_datasets=8 if scheme == "btree-static"
+                       else N_TREES)
+    names = [f"t{i}" for i in range(N_TREES)]
+    for n in names:
+        store.create_tree(n)
+        bulk_load(store, n, n_records)
+    w = Workload(store, names, n_records, tree_probs=tree_probs(skew))
+    return measure(store, lambda: w.run(n_ops, write_frac=1.0))
+
+
+def run(full: bool = False):
+    rows = []
+    n_ops = 200_000 if full else 80_000
+    mems = ([1, 2, 4] if full else [2])
+    for mem in mems:                      # (a) memory sweep @ 80-20
+        for scheme, policy, label in SCHEMES:
+            m = one(scheme, policy, (0.8, 0.2), mem, n_ops=n_ops)
+            rows.append(fmt_row(f"fig12a/mem{mem}MB/{label}",
+                                m["throughput"],
+                                f"wamp={m['write_amp']:.2f}"))
+    skews = [(0.5, 0.5), (0.8, 0.2), (0.95, 0.1)] if full \
+        else [(0.5, 0.5), (0.95, 0.1)]
+    for skew in skews:                    # (b) skew sweep @ 2MB
+        for scheme, policy, label in SCHEMES:
+            m = one(scheme, policy, skew, 2, n_ops=n_ops)
+            rows.append(fmt_row(
+                f"fig12b/skew{int(skew[0]*100)}-{int(skew[1]*100)}/{label}",
+                m["throughput"], f"wamp={m['write_amp']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

@@ -1,0 +1,81 @@
+"""Fig. 13: one dataset with a primary tree + 10 secondary-index trees.
+
+Every write updates the primary and k secondary indexes (hotspot-
+distributed choice of updated fields) and performs a primary lookup for
+index cleanup (as in the paper). Claims: same ordering as fig12; skew
+matters less (secondaries are small); more updated fields ~ proportional
+slowdown for all schemes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
+
+N_SEC = 10
+
+
+def one(scheme, policy, write_mem_mb=2, skew=(0.8, 0.2), fields_per_write=1,
+        n_records=60_000, n_ops=60_000, seed=0):
+    real = "btree-static" if scheme == "btree-static-tuned" else scheme
+    store = make_store(scheme=real, flush_policy=policy,
+                       write_memory_bytes=write_mem_mb * MB,
+                       max_log_bytes=8 * MB)
+    store.create_tree("primary", dataset="ds", entry_bytes=512)
+    for i in range(N_SEC):
+        store.create_tree(f"sec{i}", dataset="ds", entry_bytes=64)
+    bulk_load(store, "primary", n_records)
+    for i in range(N_SEC):
+        bulk_load(store, f"sec{i}", n_records // 4)
+    rng = np.random.default_rng(seed)
+    hot = max(1, int(N_SEC * skew[1]))
+    fp = np.full(N_SEC, (1 - skew[0]) / (N_SEC - hot))
+    fp[:hot] = skew[0] / hot
+    w = Workload(store, ["primary"], n_records)
+
+    def body():
+        done = 0
+        while done < n_ops:
+            b = 128
+            keys = w._keys(b)
+            # index cleanup: primary lookup per write
+            for k in keys[:16]:
+                store.lookup("primary", int(k), op=False)
+            store.write("primary", keys, keys, op=False)
+            for f in rng.choice(N_SEC, fields_per_write, replace=False,
+                                p=fp):
+                store.write(f"sec{f}", keys, keys, op=False)
+            store.note_ops(b)
+            done += b
+
+    return measure(store, body)
+
+
+def run(full: bool = False):
+    rows = []
+    schemes = [("btree-static-tuned", "lsn"), ("btree-dynamic", "mem"),
+               ("btree-dynamic", "opt"), ("partitioned", "mem"),
+               ("partitioned", "opt")]
+    mems = [1, 2, 4] if full else [2]
+    for mem in mems:
+        for s, p in schemes:
+            m = one(s, p, write_mem_mb=mem)
+            rows.append(fmt_row(f"fig13a/mem{mem}MB/{s}-{p}",
+                                m["throughput"],
+                                f"wamp={m['write_amp']:.2f}"))
+    if full:
+        for skew in [(0.5, 0.5), (0.95, 0.1)]:
+            for s, p in schemes:
+                m = one(s, p, skew=skew)
+                rows.append(fmt_row(
+                    f"fig13b/skew{int(skew[0]*100)}/{s}-{p}",
+                    m["throughput"], ""))
+    for k in ([1, 3, 5] if full else [1, 3]):
+        m = one("partitioned", "opt", fields_per_write=k)
+        rows.append(fmt_row(f"fig13c/fields{k}/part-OPT", m["throughput"],
+                            ""))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

@@ -1,0 +1,45 @@
+"""Fig. 14: TPC-C — throughput + per-transaction disk writes by scheme.
+
+Paper claims: B+-static has the highest I/O cost (even allocation across
+hot/cold tables); min-LSN/OPT beat MEM; Partitioned-OPT has the lowest
+write cost, though its extra memory-merge CPU can cost throughput when the
+workload is CPU-bound.
+"""
+from __future__ import annotations
+
+from .common import MB, fmt_row, make_store, measure
+from .tpcc import TPCC
+
+SCHEMES = [("btree-static", "lsn", "b+static"),
+           ("btree-dynamic", "mem", "b+dyn-MEM"),
+           ("btree-dynamic", "lsn", "b+dyn-LSN"),
+           ("btree-dynamic", "opt", "b+dyn-OPT"),
+           ("partitioned", "mem", "part-MEM"),
+           ("partitioned", "lsn", "part-LSN"),
+           ("partitioned", "opt", "part-OPT")]
+
+
+def one(scheme, policy, write_mem_mb=4, n_txns=6_000):
+    store = make_store(scheme=scheme, flush_policy=policy,
+                       write_memory_bytes=write_mem_mb * MB,
+                       total_memory_bytes=96 * MB, max_log_bytes=12 * MB,
+                       max_active_datasets=8)
+    drv = TPCC(store)
+    m = measure(store, lambda: drv.run(n_txns))
+    m["write_kb_per_txn"] = (m["write_pages_per_op"]
+                             * store.cfg.page_bytes / 1024)
+    return m
+
+
+def run(full: bool = False):
+    rows = []
+    n = 12_000 if full else 4_000
+    for scheme, policy, label in SCHEMES:
+        m = one(scheme, policy, n_txns=n)
+        rows.append(fmt_row(f"fig14/{label}", m["throughput"],
+                            f"write_kb_per_txn={m['write_kb_per_txn']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

@@ -1,0 +1,50 @@
+"""Fig. 15: memory-tuner mechanics on YCSB (single tree, mixed R/W).
+
+Paper claims: (1) higher write ratio => the tuner allocates more write
+memory; (2) larger total memory => more write memory (cache gains
+plateau); (3) total I/O cost falls over the tuning trajectory.
+"""
+from __future__ import annotations
+
+from repro.core.tuner.tuner import AdaptiveMemoryController, TunerConfig
+
+from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
+
+
+def one(write_ratio, total_mb, n_ops=400_000, n_records=150_000):
+    store = make_store(total_memory_bytes=total_mb * MB,
+                       write_memory_bytes=2 * MB, max_log_bytes=6 * MB,
+                       sim_cache_bytes=1 * MB, flush_policy="lsn")
+    store.create_tree("t")
+    bulk_load(store, "t", n_records)
+    ctrl = AdaptiveMemoryController(store, TunerConfig(
+        min_step_bytes=256 * 1024, ops_cycle=25_000, min_write_mem=1 * MB))
+    w = Workload(store, ["t"], n_records)
+    m = measure(store, lambda: w.run(
+        n_ops, write_frac=write_ratio,
+        on_batch=lambda s: ctrl.maybe_tune()))
+    recs = ctrl.tuner.records
+    m["x_mb"] = store.write_memory_bytes / MB
+    m["cost_first"] = recs[0].cost_per_op if recs else 0
+    m["cost_last"] = recs[-1].cost_per_op if recs else 0
+    m["tuning_steps"] = len(recs)
+    return m
+
+
+def run(full: bool = False):
+    rows = []
+    ratios = [0.1, 0.25, 0.5] if full else [0.1, 0.5]
+    totals = [32, 96] if full else [32, 96]
+    n = 400_000 if full else 120_000
+    for total in totals:
+        for r in ratios:
+            m = one(r, total, n_ops=n)
+            rows.append(fmt_row(
+                f"fig15/total{total}MB/write{int(r*100)}", m["x_mb"],
+                f"steps={m['tuning_steps']};cost0={m['cost_first']:.3f};"
+                f"cost={m['cost_last']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

@@ -1,0 +1,73 @@
+"""Fig. 16: tuner accuracy on TPC-C — tuned allocation vs exhaustive
+search vs fixed baselines (small write memory / 50-50 split).
+
+Paper claims: tuned weighted I/O cost ~ exhaustive optimum; both fixed
+baselines are worse. Weights: omega=2 (SSD writes), gamma=1.
+"""
+from __future__ import annotations
+
+from repro.core.tuner.tuner import AdaptiveMemoryController, TunerConfig
+
+from .common import MB, fmt_row, make_store, measure
+from .tpcc import TPCC
+
+OMEGA, GAMMA = 2.0, 1.0
+
+
+def weighted_cost(m):
+    return OMEGA * m["write_pages_per_op"] + GAMMA * m["read_pages_per_op"]
+
+
+def fixed_run(write_mem_mb, total_mb, n_txns):
+    store = make_store(total_memory_bytes=total_mb * MB,
+                       write_memory_bytes=int(write_mem_mb * MB),
+                       max_log_bytes=8 * MB, flush_policy="opt")
+    drv = TPCC(store)
+    drv.run(n_txns // 4)                      # warm-up (excluded)
+    m = measure(store, lambda: drv.run(n_txns))
+    m["wcost"] = weighted_cost(m)
+    return m
+
+
+def tuned_run(total_mb, n_txns):
+    store = make_store(total_memory_bytes=total_mb * MB,
+                       write_memory_bytes=2 * MB, max_log_bytes=8 * MB,
+                       flush_policy="opt")
+    ctrl = AdaptiveMemoryController(store, TunerConfig(
+        omega=OMEGA, gamma=GAMMA, min_step_bytes=256 * 1024,
+        ops_cycle=2_000, min_write_mem=1 * MB))
+    drv = TPCC(store)
+    drv.run(n_txns // 2, on_txn=lambda: ctrl.maybe_tune())  # tuning warm-up
+    m = measure(store, lambda: drv.run(n_txns,
+                                       on_txn=lambda: ctrl.maybe_tune()))
+    m["wcost"] = weighted_cost(m)
+    m["x_mb"] = store.write_memory_bytes / MB
+    return m
+
+
+def run(full: bool = False):
+    rows = []
+    total = 96
+    n = 10_000 if full else 3_000
+    fracs = [1 / 32, 1 / 16, 1 / 8, 1 / 4, 3 / 8, 1 / 2] if full \
+        else [1 / 16, 1 / 4, 1 / 2]
+    sweep = {}
+    for f in fracs:
+        m = fixed_run(total * f, total, n)
+        sweep[f] = m["wcost"]
+        rows.append(fmt_row(f"fig16/fixed_{f:.3f}", m["wcost"],
+                            f"thr={m['throughput']:.0f}"))
+    opt = min(sweep.values())
+    m = tuned_run(total, n)
+    rows.append(fmt_row("fig16/tuned", m["wcost"],
+                        f"x={m['x_mb']:.1f}MB;opt={opt:.3f};"
+                        f"ratio={m['wcost']/max(opt,1e-9):.2f}"))
+    m50 = sweep.get(1 / 2) or fixed_run(total / 2, total, n)["wcost"]
+    msm = sweep.get(1 / 32) or fixed_run(total / 32, total, n)["wcost"]
+    rows.append(fmt_row("fig16/baseline_50pct", m50, ""))
+    rows.append(fmt_row("fig16/baseline_small", msm, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(full=True)))

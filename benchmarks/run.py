@@ -1,0 +1,35 @@
+"""Run reduced versions of every paper-figure benchmark.
+
+Prints ``name,value,derived`` CSV (one line per measured point).
+Full-size figures: run each module directly, e.g.
+``python -m benchmarks.fig07_single_tree``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig07_single_tree, fig08_memory_merge_overhead,
+                   fig09_flush_heuristics, fig10_grouped_l0,
+                   fig11_dynamic_levels, fig12_multi_primary,
+                   fig13_secondary, fig14_tpcc, fig15_tuner_ycsb,
+                   fig16_tuner_accuracy, fig17_tuner_responsiveness,
+                   kv_serving)
+    modules = [fig07_single_tree, fig08_memory_merge_overhead,
+               fig09_flush_heuristics, fig10_grouped_l0,
+               fig11_dynamic_levels, fig12_multi_primary, fig13_secondary,
+               fig14_tpcc, fig15_tuner_ycsb, fig16_tuner_accuracy,
+               fig17_tuner_responsiveness, kv_serving]
+    full = "--full" in sys.argv
+    print("name,value,derived")
+    for mod in modules:
+        t0 = time.time()
+        for row in mod.run(full=full):
+            print(row)
+        print(f"# {mod.__name__}: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Mini TPC-C-like driver over the LSM store (scaled; read-uncommitted
+record ops, as in the paper's AsterixDB setup). Five transaction types with
+the standard mix; per-table entry sizes preserve TPC-C's relative row sizes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import bulk_load
+
+TABLES = {          # name: (entry_bytes, rows)
+    "warehouse": (96, 64),
+    "district": (96, 640),
+    "customer": (656, 20_000),
+    "history": (48, 20_000),
+    "orders": (32, 30_000),
+    "new_order": (16, 9_000),
+    "order_line": (216, 300_000),
+    "item": (80, 20_000),
+    "stock": (304, 60_000),
+}
+
+MIX = [("new_order", 0.45), ("payment", 0.43), ("order_status", 0.04),
+       ("delivery", 0.04), ("stock_level", 0.04)]
+
+
+class TPCC:
+    def __init__(self, store, seed=0):
+        self.store = store
+        self.rng = np.random.default_rng(seed)
+        for name, (eb, rows) in TABLES.items():
+            store.create_tree(name, dataset=name, entry_bytes=eb)
+            bulk_load(store, name, rows)
+        self.rows = {n: r for n, (_, r) in TABLES.items()}
+        self._oid = {n: r for n, r in self.rows.items()}
+
+    def _k(self, table, n=1):
+        return self.rng.integers(0, self.rows[table], n)
+
+    def _read(self, table, n=1):
+        for k in self._k(table, n):
+            self.store.lookup(table, int(k), op=False)
+
+    def _write(self, table, n=1, fresh=False):
+        if fresh:
+            ks = np.arange(self._oid[table], self._oid[table] + n)
+            self._oid[table] += n
+        else:
+            ks = self._k(table, n)
+        self.store.write(table, ks, ks, op=False)
+
+    def new_order(self):
+        self._read("warehouse"); self._read("district")
+        self._read("customer"); self._read("item", 10)
+        self._read("stock", 10)
+        self._write("district"); self._write("orders", 1, fresh=True)
+        self._write("new_order", 1, fresh=True)
+        self._write("order_line", 10, fresh=True)
+        self._write("stock", 10)
+
+    def payment(self):
+        self._read("warehouse"); self._read("district")
+        self._read("customer")
+        self._write("warehouse"); self._write("district")
+        self._write("customer"); self._write("history", 1, fresh=True)
+
+    def order_status(self):
+        self._read("customer"); self._read("orders")
+        self._read("order_line", 10)
+
+    def delivery(self):
+        self._write("new_order", 10); self._write("orders", 10)
+        self._write("order_line", 10); self._write("customer", 10)
+
+    def stock_level(self):
+        self._read("district")
+        self.store.scan("order_line", int(self._k("order_line")[0]), 100,
+                        op=False)
+        self._read("stock", 20)
+
+    def run(self, n_txns, mix=None, on_txn=None):
+        mix = mix or MIX
+        names = [m[0] for m in mix]
+        probs = np.array([m[1] for m in mix])
+        probs = probs / probs.sum()
+        choices = self.rng.choice(len(names), n_txns, p=probs)
+        for c in choices:
+            getattr(self, names[c])()
+            self.store.note_ops(1)
+            if on_txn is not None:
+                on_txn()
+
+
+READ_MOSTLY = [("new_order", 0.025), ("payment", 0.02),
+               ("delivery", 0.005), ("order_status", 0.475),
+               ("stock_level", 0.475)]

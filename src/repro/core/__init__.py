@@ -1,0 +1,8 @@
+# The paper's primary contribution: adaptive memory management for
+# LSM-based storage (partitioned memory components, flush policies, and the
+# write-memory/buffer-cache memory tuner).
+from .lsm.storage import LSMStore, StoreConfig, TimeModel  # noqa: F401
+from .lsm.tree import LSMTree  # noqa: F401
+from .tuner.derivatives import TunerStats, cost_derivative  # noqa: F401
+from .tuner.tuner import (AdaptiveMemoryController, MemoryTuner,  # noqa: F401
+                          TunerConfig)

@@ -1,0 +1,44 @@
+"""Analytical LSM write-cost model (§2.1, Equation 1) — pure JAX.
+
+    C = e/P + e/P * (T+1) * log_T(|L_N| / (a * Mw))        [pages/entry]
+
+and the §4.2 optimal write-memory allocation, the Lagrange-multiplier
+solution of Eq. 2:  a_i_opt = r_i / sum_j r_j.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def write_cost_per_entry(entry_bytes, page_bytes, size_ratio, last_level_bytes,
+                         write_mem_bytes):
+    """Equation 1. All args are scalars (or broadcastable arrays)."""
+    e = jnp.asarray(entry_bytes, jnp.float32)
+    P = jnp.asarray(page_bytes, jnp.float32)
+    T = jnp.asarray(size_ratio, jnp.float32)
+    n_levels = jnp.log(jnp.maximum(last_level_bytes / write_mem_bytes, 1.0)) \
+        / jnp.log(T)
+    return e / P + e / P * (T + 1.0) * n_levels
+
+
+@jax.jit
+def optimal_allocation(write_rates):
+    """§4.2: a_i_opt = r_i / sum_j r_j (0-safe)."""
+    r = jnp.asarray(write_rates, jnp.float32)
+    s = jnp.sum(r)
+    safe = jnp.where(s > 0, s, 1.0)    # no epsilon floor: subnormal rates
+    return jnp.where(s > 0, r / safe,  # must still normalize to 1
+                     jnp.ones_like(r) / r.shape[0])
+
+
+@jax.jit
+def total_write_cost(write_rates, entry_bytes, page_bytes, size_ratio,
+                     last_level_bytes, alloc, write_mem_bytes):
+    """Objective of Eq. 2: sum_i (r_i / e_i) * C_i, for a given allocation."""
+    r = jnp.asarray(write_rates, jnp.float32)
+    e = jnp.asarray(entry_bytes, jnp.float32)
+    c = write_cost_per_entry(e, page_bytes, size_ratio, last_level_bytes,
+                             alloc * write_mem_bytes)
+    return jnp.sum(r / e * c)

@@ -1,0 +1,278 @@
+"""Memory component structures (§4.1).
+
+``PartitionedMemComponent`` is the paper's contribution: the write memory of
+one LSM-tree is itself an in-memory partitioned-leveling LSM-tree — an active
+SSTable M0 plus memory levels M1..Mk of immutable, range-partitioned
+SSTables. It supports *partial* flushes (one last-level SSTable at a time,
+round-robin), min-LSN flushes (the SSTable with the smallest LSN plus all
+overlapping SSTables at newer levels, to facilitate log truncation), and
+*full* flushes (merge-sort everything).
+
+Baseline components (monolithic B+-tree, Accordion) live in
+``repro.core.lsm.baselines``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .sstable import SSTable, merge_runs, partition_run, sstable_from_run
+
+
+@dataclass
+class MemStats:
+    entries_merged: int = 0       # memory-merge CPU proxy
+    entries_sealed: int = 0
+    merges: int = 0
+
+
+class MemComponentBase:
+    """Interface shared by all memory-component structures."""
+
+    def write(self, keys, vals, lsn0):
+        raise NotImplementedError
+
+    @property
+    def used_bytes(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def min_lsn(self) -> int:
+        """Smallest LSN still buffered (inf if empty)."""
+        raise NotImplementedError
+
+    def lookup(self, key: int):
+        raise NotImplementedError
+
+    def is_empty(self) -> bool:
+        raise NotImplementedError
+
+
+def _insert_disjoint(level, ssts):
+    """Insert disjoint SSTables into a partitioned level, keep sorted order."""
+    level.extend(ssts)
+    level.sort(key=lambda s: s.min_key)
+
+
+def _overlap_slice(level, lo, hi):
+    """Return (start, end) index range of SSTables overlapping [lo, hi]."""
+    i = 0
+    while i < len(level) and level[i].max_key < lo:
+        i += 1
+    j = i
+    while j < len(level) and level[j].min_key <= hi:
+        j += 1
+    return i, j
+
+
+class PartitionedMemComponent(MemComponentBase):
+    """§4.1.1: in-memory partitioned-leveling LSM-tree."""
+
+    def __init__(self, *, entry_bytes: int, page_bytes: int,
+                 active_bytes_max: int, size_ratio: int = 10):
+        self.entry_bytes = entry_bytes
+        self.page_bytes = page_bytes
+        self.active_bytes_max = active_bytes_max
+        self.T = size_ratio
+        self.active: dict = {}            # key -> (val, lsn)
+        self.active_lsn_min: int | None = None
+        self.levels: list[list[SSTable]] = []   # M1..Mk
+        self.rr_key: int = -(2**62)       # round-robin flush cursor (by min_key)
+        self.stats = MemStats()
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def active_bytes(self) -> int:
+        return len(self.active) * self.entry_bytes
+
+    @property
+    def used_bytes(self) -> int:
+        return self.active_bytes + sum(s.size_bytes
+                                       for lvl in self.levels for s in lvl)
+
+    @property
+    def min_lsn(self) -> int:
+        lsns = [s.lsn_min for lvl in self.levels for s in lvl]
+        if self.active_lsn_min is not None:
+            lsns.append(self.active_lsn_min)
+        return min(lsns) if lsns else 2**62
+
+    def is_empty(self) -> bool:
+        return not self.active and not any(self.levels)
+
+    def level_max_bytes(self, i: int) -> int:
+        """Max size of memory level M_{i+1} (0-indexed)."""
+        return self.active_bytes_max * (self.T ** (i + 1))
+
+    # -- write path ----------------------------------------------------------
+    def write(self, keys, vals, lsn0: int) -> None:
+        if self.active_lsn_min is None:
+            self.active_lsn_min = lsn0
+        a = self.active
+        for i, k in enumerate(keys):
+            a[int(k)] = (int(vals[i]), lsn0 + i)
+
+    def over_active_limit(self) -> bool:
+        return self.active_bytes >= self.active_bytes_max
+
+    def seal_active(self) -> None:
+        """Freeze M0 into an SSTable and merge it into M1 (memory merge)."""
+        if not self.active:
+            return
+        keys = np.fromiter(self.active.keys(), np.int64, len(self.active))
+        order = np.argsort(keys)
+        keys = keys[order]
+        vv = np.array([self.active[int(k)] for k in keys], np.int64)
+        vals, lsns = vv[:, 0], vv[:, 1]
+        self.stats.entries_sealed += len(keys)
+        sst = sstable_from_run(keys, vals, int(lsns.min()), int(lsns.max()),
+                               self.entry_bytes, self.page_bytes)
+        self.active = {}
+        self.active_lsn_min = None
+        if not self.levels:
+            self.levels.append([])
+        self._merge_into_level(0, [sst])
+
+    def _merge_into_level(self, li: int, newer: list[SSTable]) -> None:
+        """Merge ``newer`` SSTables (newest-first precedence) into level li."""
+        if li >= len(self.levels):
+            self.levels.append([])
+        lvl = self.levels[li]
+        lo = min(s.min_key for s in newer)
+        hi = max(s.max_key for s in newer)
+        i, j = _overlap_slice(lvl, lo, hi)
+        olds = lvl[i:j]
+        del lvl[i:j]
+        runs = [(s.keys, s.vals) for s in newer] + [(s.keys, s.vals) for s in olds]
+        keys, vals = merge_runs(runs)
+        self.stats.entries_merged += sum(len(r[0]) for r in runs)
+        self.stats.merges += 1
+        lsn_min = min(s.lsn_min for s in newer + olds)
+        lsn_max = max(s.lsn_max for s in newer + olds)
+        outs = partition_run(keys, vals, lsn_min, lsn_max, self.entry_bytes,
+                             self.page_bytes, self.active_bytes_max)
+        _insert_disjoint(lvl, outs)
+
+    def maintain(self) -> None:
+        """Run memory merges until every level respects its max size (§4.1.1:
+        greedy min-overlap-ratio victim selection)."""
+        changed = True
+        while changed:
+            changed = False
+            for li in range(len(self.levels)):
+                lvl = self.levels[li]
+                if sum(s.size_bytes for s in lvl) > self.level_max_bytes(li):
+                    # Over-full: greedily push one SSTable down (growing the
+                    # structure with a new last level when needed).
+                    victim = self._greedy_victim(li)
+                    lvl.remove(victim)
+                    self._merge_into_level(li + 1, [victim])
+                    changed = True
+        # Drop empty trailing levels so flush targets the true last level.
+        while self.levels and not self.levels[-1]:
+            self.levels.pop()
+
+    def _greedy_victim(self, li: int) -> SSTable:
+        """Pick the SSTable at level li minimizing the overlapping ratio with
+        level li+1 (size of overlapping SSTables / size of the victim)."""
+        lvl = self.levels[li]
+        nxt = self.levels[li + 1] if li + 1 < len(self.levels) else []
+        best, best_ratio = None, None
+        for s in lvl:
+            i, j = _overlap_slice(nxt, s.min_key, s.max_key)
+            ov = sum(t.size_bytes for t in nxt[i:j])
+            ratio = ov / s.size_bytes
+            if best_ratio is None or ratio < best_ratio:
+                best, best_ratio = s, ratio
+        return best
+
+    # -- flush paths ---------------------------------------------------------
+    def flush_partial(self):
+        """§4.1.1 memory-triggered: round-robin one SSTable off the last level.
+
+        Returns a list with one (keys, vals, lsn_min, lsn_max) run.
+        """
+        if not any(self.levels):
+            self.seal_active()
+            self.maintain()
+        if not any(self.levels):
+            return []
+        last = max(i for i, lvl in enumerate(self.levels) if lvl)
+        lvl = self.levels[last]
+        # round-robin by key: first SSTable with min_key > cursor, else wrap
+        pick = next((s for s in lvl if s.min_key > self.rr_key), lvl[0])
+        self.rr_key = pick.min_key
+        lvl.remove(pick)
+        while self.levels and not self.levels[-1]:
+            self.levels.pop()
+        return [(pick.keys, pick.vals, pick.lsn_min, pick.lsn_max)]
+
+    def flush_min_lsn(self):
+        """§4.1.1 log-triggered: flush the min-LSN SSTable plus all
+        overlapping SSTables at newer (higher) levels, merged as one run."""
+        if not any(self.levels):
+            self.seal_active()
+            self.maintain()
+        if not any(self.levels):
+            return []
+        best_li, best = None, None
+        for li, lvl in enumerate(self.levels):
+            for s in lvl:
+                if best is None or s.lsn_min < best.lsn_min:
+                    best_li, best = li, s
+        group = [best]
+        self.levels[best_li].remove(best)
+        for li in range(best_li - 1, -1, -1):   # newer levels
+            lvl = self.levels[li]
+            i, j = _overlap_slice(lvl, best.min_key, best.max_key)
+            group = lvl[i:j] + group            # newer first
+            del lvl[i:j]
+        while self.levels and not self.levels[-1]:
+            self.levels.pop()
+        keys, vals = merge_runs([(s.keys, s.vals) for s in group])
+        self.stats.entries_merged += sum(s.num_entries for s in group)
+        return [(keys, vals, min(s.lsn_min for s in group),
+                 max(s.lsn_max for s in group))]
+
+    def flush_full(self):
+        """§4.1.4: merge-sort the entire component into one sorted run."""
+        self.seal_active()
+        ssts = [s for lvl in self.levels for s in lvl]
+        if not ssts:
+            return []
+        runs = []
+        for lvl in self.levels:                  # newer levels first
+            runs.extend((s.keys, s.vals) for s in lvl)
+        keys, vals = merge_runs(runs)
+        self.stats.entries_merged += sum(s.num_entries for s in ssts)
+        self.levels = []
+        return [(keys, vals, min(s.lsn_min for s in ssts),
+                 max(s.lsn_max for s in ssts))]
+
+    # -- reads ----------------------------------------------------------------
+    def lookup(self, key: int):
+        hit = self.active.get(key)
+        if hit is not None:
+            return True, hit[0]
+        for lvl in self.levels:                  # newest level first
+            i, j = _overlap_slice(lvl, key, key)
+            for s in lvl[i:j]:
+                found, val, _ = s.lookup(key)
+                if found:
+                    return True, val
+        return False, 0
+
+    def scan_runs(self, lo: int, hi: int):
+        """All in-memory (keys, vals) runs overlapping [lo,hi], newest first."""
+        out = []
+        if self.active:
+            ks = np.array([k for k in self.active if lo <= k <= hi], np.int64)
+            if len(ks):
+                ks.sort()
+                vs = np.array([self.active[int(k)][0] for k in ks], np.int64)
+                out.append((ks, vs))
+        for lvl in self.levels:                  # newest level first
+            i, j = _overlap_slice(lvl, lo, hi)
+            out.extend((s.keys, s.vals) for s in lvl[i:j])
+        return out

@@ -1,0 +1,129 @@
+"""SSTable: immutable sorted run + page/Bloom accounting.
+
+An SSTable stores a sorted, de-duplicated run of (key, value) pairs. In the
+real system the value payload lives in disk pages; here we carry values as an
+int64 "payload checksum" array so correctness (newest-wins reconciliation) is
+fully testable, while I/O is accounted at page granularity exactly as
+AsterixDB does (entry_bytes per entry, page_bytes per page, one Bloom filter
+per SSTable at ~10 bits/key for a 1% false-positive rate).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_SST_IDS = itertools.count()
+
+
+def reset_sst_ids() -> None:
+    """Reset the global SSTable id counter (tests/benchmarks isolation)."""
+    global _SST_IDS
+    _SST_IDS = itertools.count()
+
+
+def merge_runs(runs):
+    """Merge sorted (keys, vals) runs with newest-wins reconciliation.
+
+    ``runs`` is ordered newest-first. Returns a single sorted, unique run.
+    """
+    runs = [r for r in runs if len(r[0])]
+    if not runs:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    if len(runs) == 1:
+        return runs[0]
+    keys = np.concatenate([r[0] for r in runs])
+    vals = np.concatenate([r[1] for r in runs])
+    # Stable sort by key keeps the newest occurrence first within equal keys
+    # because runs are concatenated newest-first.
+    order = np.argsort(keys, kind="stable")
+    keys, vals = keys[order], vals[order]
+    keep = np.ones(len(keys), bool)
+    keep[1:] = keys[1:] != keys[:-1]
+    return keys[keep], vals[keep]
+
+
+@dataclass(eq=False)  # identity equality: SSTables live in Python lists
+class SSTable:
+    """Immutable sorted run with LSN bookkeeping."""
+
+    keys: np.ndarray
+    vals: np.ndarray
+    lsn_min: int
+    lsn_max: int
+    entry_bytes: int
+    page_bytes: int
+    sst_id: int = field(default_factory=lambda: next(_SST_IDS))
+
+    def __post_init__(self):
+        assert len(self.keys) == len(self.vals)
+        assert len(self.keys) > 0, "empty SSTable"
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def num_entries(self) -> int:
+        return int(len(self.keys))
+
+    @property
+    def size_bytes(self) -> int:
+        return self.num_entries * self.entry_bytes
+
+    @property
+    def min_key(self) -> int:
+        return int(self.keys[0])
+
+    @property
+    def max_key(self) -> int:
+        return int(self.keys[-1])
+
+    @property
+    def entries_per_page(self) -> int:
+        return max(1, self.page_bytes // max(1, self.entry_bytes))
+
+    @property
+    def num_pages(self) -> int:
+        return -(-self.num_entries // self.entries_per_page)
+
+    def bloom_pages(self, bits_per_key: int = 10) -> int:
+        return max(1, -(-(self.num_entries * bits_per_key // 8) // self.page_bytes))
+
+    # -- key ops ------------------------------------------------------------
+    def overlaps(self, lo: int, hi: int) -> bool:
+        return self.min_key <= hi and lo <= self.max_key
+
+    def covers(self, key: int) -> bool:
+        return self.min_key <= key <= self.max_key
+
+    def lookup(self, key: int):
+        """Return (found, value, page_index)."""
+        i = int(np.searchsorted(self.keys, key))
+        if i < len(self.keys) and int(self.keys[i]) == key:
+            return True, int(self.vals[i]), i // self.entries_per_page
+        return False, 0, min(i, self.num_entries - 1) // self.entries_per_page
+
+
+def sstable_from_run(keys, vals, lsn_min, lsn_max, entry_bytes, page_bytes):
+    return SSTable(np.asarray(keys, np.int64), np.asarray(vals, np.int64),
+                   int(lsn_min), int(lsn_max), int(entry_bytes), int(page_bytes))
+
+
+def partition_run(keys, vals, lsn_min, lsn_max, entry_bytes, page_bytes,
+                  target_bytes):
+    """Split a big sorted run into SSTables of ~target_bytes each."""
+    n = len(keys)
+    if n == 0:
+        return []
+    per = max(1, target_bytes // max(1, entry_bytes))
+    return [sstable_from_run(keys[s:min(n, s + per)], vals[s:min(n, s + per)],
+                             lsn_min, lsn_max, entry_bytes, page_bytes)
+            for s in range(0, n, per)]
+
+
+def total_bytes(tables) -> int:
+    return sum(t.size_bytes for t in tables)
+
+
+def overlapping(tables, lo: int, hi: int):
+    """Subset of ``tables`` whose key range intersects [lo, hi]."""
+    return [t for t in tables if t.overlaps(lo, hi)]

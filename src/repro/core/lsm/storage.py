@@ -1,0 +1,373 @@
+"""LSMStore: the adaptive memory-management architecture of §3.
+
+One store = many LSM-trees (grouped into *datasets*: a primary tree plus its
+secondary-index trees) sharing
+
+  * a write-memory region ``x`` (shared pool, no per-component limits),
+  * a buffer cache of ``total - x - sim`` bytes (clock replacement),
+  * a transaction log (length-capped; log-triggered flushes),
+  * a ghost cache of ``sim`` bytes feeding the memory tuner.
+
+Flush policies (§4.2): ``mem`` (max-memory), ``lsn`` (min-LSN), ``opt``
+(write-rate-proportional). Memory-management schemes (§6):
+``partitioned`` (this paper), ``btree-dynamic``, ``btree-static``,
+``btree-static-tuned``, ``accordion-index``, ``accordion-data``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..tuner.simcache import GhostCache
+from .baselines import AccordionMemComponent, BTreeMemComponent
+from .cache import ClockCache, Disk
+from .memtable import PartitionedMemComponent
+from .tree import LSMTree
+
+_INF = 2**62
+
+SCHEMES = ("partitioned", "btree-dynamic", "btree-static",
+           "btree-static-tuned", "accordion-index", "accordion-data")
+POLICIES = ("mem", "lsn", "opt")
+
+
+@dataclass
+class TimeModel:
+    """Throughput proxy: simulated wall time from I/O bytes + CPU work.
+
+    Bandwidths follow the paper's testbed (NVMe: 250 MB/s write, 500 MB/s
+    read). CPU constants are calibrated so that the *relative* overheads
+    match the paper's measurements (e.g. Fig. 8's 20-40% in-memory overhead
+    of Partitioned vs B+-dynamic at ~11x memory write amplification).
+    """
+
+    write_bw: float = 250e6
+    read_bw: float = 500e6
+    cpu_insert_btree: float = 0.80e-6     # dict/B+-tree point insert
+    cpu_insert_append: float = 0.30e-6    # append to the active SSTable
+    cpu_seal_sort: float = 0.15e-6        # per entry, sort at seal
+    cpu_merge_mem: float = 0.10e-6        # per entry per memory-merge pass
+    cpu_merge_disk: float = 0.05e-6       # per entry per disk-merge pass
+    cpu_lookup: float = 1.00e-6           # per point lookup / scan seek
+
+    def elapsed(self, stats, *, scheme: str) -> tuple:
+        page = 16 * 1024
+        io = ((stats.pages_flushed + stats.pages_merge_written) * page
+              / self.write_bw
+              + (stats.pages_merge_read + stats.pages_query_read) * page
+              / self.read_bw)
+        if scheme.startswith("partitioned"):
+            ins = stats.entries_written * self.cpu_insert_append \
+                + stats.entries_written * self.cpu_seal_sort
+        else:
+            ins = stats.entries_written * self.cpu_insert_btree
+        cpu = (ins + stats.entries_merged_mem * self.cpu_merge_mem
+               + stats.entries_merged_disk * self.cpu_merge_disk)
+        return io, cpu
+
+
+@dataclass
+class StoreConfig:
+    total_memory_bytes: int = 512 << 20
+    write_memory_bytes: int = 128 << 20        # the tunable x
+    sim_cache_bytes: int = 16 << 20
+    page_bytes: int = 16 << 10
+    entry_bytes: int = 1024
+    size_ratio: int = 10
+    active_sstable_bytes: int = 1 << 20        # scaled-down 32MB
+    sstable_bytes: int = 2 << 20               # disk SSTable partition target
+    max_log_bytes: int = 256 << 20
+    mem_flush_threshold: float = 0.95
+    scheme: str = "partitioned"
+    flush_policy: str = "opt"                  # mem | lsn | opt
+    max_active_datasets: int = 8               # D for the static schemes
+    beta: float = 0.5                          # §4.1.4 partial-vs-full
+    l0_target_groups: int = 2
+    l0_max_groups: int = 4
+    l0_greedy: bool = True
+    l0_grouped: bool = True
+    dynamic_levels: bool = True
+    static_num_levels: int | None = None
+    forced_flush_kind: str | None = None       # for the Fig. 9 ablation
+    accordion_pipeline: int = 4
+    time_model: TimeModel = field(default_factory=TimeModel)
+
+    def validate(self):
+        assert self.scheme in SCHEMES, self.scheme
+        assert self.flush_policy in POLICIES, self.flush_policy
+        assert self.write_memory_bytes + self.sim_cache_bytes \
+            <= self.total_memory_bytes
+        return self
+
+
+class LSMStore:
+    def __init__(self, cfg: StoreConfig):
+        self.cfg = cfg.validate()
+        self.ghost = GhostCache(cfg.sim_cache_bytes // cfg.page_bytes)
+        cache_pages = max(
+            0, (cfg.total_memory_bytes - cfg.write_memory_bytes
+                - cfg.sim_cache_bytes) // cfg.page_bytes)
+        self.cache = ClockCache(cache_pages, on_evict=self.ghost.add_evicted)
+        self.disk = Disk(cfg.page_bytes, self.cache, self.ghost)
+        self.trees: dict[str, LSMTree] = {}
+        self.datasets: dict[str, list[str]] = {}
+        self.tree_dataset: dict[str, str] = {}
+        self.write_memory_bytes = cfg.write_memory_bytes
+        # transaction log
+        self.log_pos = 0                        # byte offset
+        # per-tree write-rate windows for the OPT policy (§4.2)
+        self._rate_win: dict[str, deque] = {}
+        # LRU order of active datasets for the static schemes
+        self._active_ds: list[str] = []
+        self._share_ewma: dict[str, float] = {}
+
+    # -- schema ------------------------------------------------------------------
+    def create_tree(self, name: str, *, dataset: str | None = None,
+                    entry_bytes: int | None = None) -> LSMTree:
+        cfg = self.cfg
+        e = entry_bytes or cfg.entry_bytes
+        if cfg.scheme == "partitioned":
+            mem = PartitionedMemComponent(
+                entry_bytes=e, page_bytes=cfg.page_bytes,
+                active_bytes_max=cfg.active_sstable_bytes,
+                size_ratio=cfg.size_ratio)
+        elif cfg.scheme.startswith("btree"):
+            mem = BTreeMemComponent(entry_bytes=e)
+        else:
+            mem = AccordionMemComponent(
+                entry_bytes=e, active_bytes_max=cfg.active_sstable_bytes,
+                merge_data=cfg.scheme == "accordion-data",
+                pipeline_threshold=cfg.accordion_pipeline)
+        tree = LSMTree(
+            name, disk=self.disk, entry_bytes=e, mem_component=mem,
+            sstable_bytes=cfg.sstable_bytes, size_ratio=cfg.size_ratio,
+            l0_max_groups=cfg.l0_max_groups,
+            l0_target_groups=cfg.l0_target_groups,
+            l0_greedy=cfg.l0_greedy, l0_grouped=cfg.l0_grouped,
+            dynamic_levels=cfg.dynamic_levels,
+            static_num_levels=cfg.static_num_levels)
+        self.trees[name] = tree
+        ds = dataset or name
+        self.datasets.setdefault(ds, []).append(name)
+        self.tree_dataset[name] = ds
+        self._rate_win[name] = deque()
+        self._share_ewma[name] = 0.0
+        return tree
+
+    # -- memory accounting ----------------------------------------------------------
+    def write_memory_used(self) -> int:
+        return sum(t.mem_bytes for t in self.trees.values())
+
+    def min_lsn(self) -> int:
+        return min((t.min_lsn for t in self.trees.values()), default=_INF)
+
+    @property
+    def log_length(self) -> int:
+        m = self.min_lsn()
+        return self.log_pos - (m if m < _INF else self.log_pos)
+
+    def set_write_memory(self, x: int) -> None:
+        """Apply a new write-memory size (tuner's actuator)."""
+        cfg = self.cfg
+        x = int(min(max(x, 1 << 20), cfg.total_memory_bytes
+                    - cfg.sim_cache_bytes - (1 << 20)))
+        self.write_memory_bytes = x
+        pages = max(0, (cfg.total_memory_bytes - x - cfg.sim_cache_bytes)
+                    // cfg.page_bytes)
+        self.cache.resize(pages)
+
+    # -- write path ------------------------------------------------------------------
+    def write(self, tree_name: str, keys, vals=None, *, op: bool = True) -> None:
+        tree = self.trees[tree_name]
+        keys = np.asarray(keys, np.int64)
+        if vals is None:
+            vals = keys  # payload checksum defaults to the key
+        lsn0 = self.log_pos
+        tree.write_batch(keys, np.asarray(vals, np.int64), lsn0)
+        nbytes = len(keys) * tree.entry_bytes
+        self.log_pos += nbytes
+        self.disk.stats.entries_written += len(keys)
+        if op:
+            self.disk.stats.ops += 1
+        win = self._rate_win[tree_name]
+        win.append((lsn0, nbytes))
+        self._trim_rate_windows()
+        self._dataset_touch(tree_name)
+        self._enforce_memory()
+        self._enforce_log()
+        self._maintain(tree)
+
+    def note_ops(self, n: int = 1) -> None:
+        self.disk.stats.ops += n
+
+    def _trim_rate_windows(self):
+        lo = self.log_pos - self.cfg.max_log_bytes
+        for win in self._rate_win.values():
+            while win and win[0][0] < lo:
+                win.popleft()
+
+    # -- dataset activation (static schemes, §2.2) --------------------------------------
+    def _dataset_touch(self, tree_name: str) -> None:
+        if not self.cfg.scheme.startswith("btree-static"):
+            return
+        ds = self.tree_dataset[tree_name]
+        if ds in self._active_ds:
+            self._active_ds.remove(ds)
+            self._active_ds.append(ds)
+            return
+        D = self.cfg.max_active_datasets
+        if len(self._active_ds) >= D:
+            victim = self._active_ds.pop(0)     # evict LRU dataset: flush all
+            self._flush_dataset(victim, trigger="mem")
+        self._active_ds.append(ds)
+
+    def _flush_dataset(self, ds: str, *, trigger: str) -> int:
+        freed = 0
+        for name in self.datasets[ds]:
+            t = self.trees[name]
+            if not t.mem.is_empty():
+                self._pre_flush_sample(t)
+                freed += t.flush(trigger=trigger, log_pos=self.log_pos,
+                                 max_log_bytes=self.cfg.max_log_bytes,
+                                 total_write_mem=self.write_memory_bytes,
+                                 beta=self.cfg.beta)
+                self._maintain(t)
+        return freed
+
+    # -- flush triggers -------------------------------------------------------------------
+    def _pre_flush_sample(self, tree: LSMTree) -> None:
+        e = self._share_ewma[tree.name]
+        self._share_ewma[tree.name] = 0.7 * e + 0.3 * tree.mem_bytes
+
+    def _tree_share(self, tree: LSMTree) -> float:
+        return max(self._share_ewma[tree.name], tree.mem_bytes,
+                   self.cfg.active_sstable_bytes)
+
+    def _enforce_memory(self) -> None:
+        cfg = self.cfg
+        if cfg.scheme.startswith("btree-static"):
+            # per-dataset quota = write_mem / D; full flush at quota
+            D = cfg.max_active_datasets
+            quota = self.write_memory_bytes / max(1, D)
+            for ds, names in self.datasets.items():
+                used = sum(self.trees[n].mem_bytes for n in names)
+                if used >= quota:
+                    self._flush_dataset(ds, trigger="mem")
+            return
+        # shared-pool schemes
+        budget = cfg.mem_flush_threshold * self.write_memory_bytes
+        # Accordion-data: a big in-memory merge may blow the budget
+        for t in self.trees.values():
+            m = t.mem
+            if isinstance(m, AccordionMemComponent):
+                m.budget_hint_bytes = int(budget)
+                if m.request_flush:
+                    self._pre_flush_sample(t)
+                    t.flush(trigger="mem", log_pos=self.log_pos,
+                            max_log_bytes=cfg.max_log_bytes,
+                            total_write_mem=self.write_memory_bytes,
+                            beta=cfg.beta)
+                    m.request_flush = False
+                    self._maintain(t)
+        guard = 0
+        while self.write_memory_used() > budget and guard < 1000:
+            guard += 1
+            t = self._pick_flush_tree()
+            if t is None:
+                break
+            self._pre_flush_sample(t)
+            freed = t.flush(trigger="mem", log_pos=self.log_pos,
+                            max_log_bytes=cfg.max_log_bytes,
+                            total_write_mem=self.write_memory_bytes,
+                            beta=cfg.beta,
+                            forced_kind=cfg.forced_flush_kind)
+            self._maintain(t)
+            if freed == 0:
+                break
+
+    def _pick_flush_tree(self) -> LSMTree | None:
+        """§4.2 flush policies."""
+        nonempty = [t for t in self.trees.values() if not t.mem.is_empty()]
+        if not nonempty:
+            return None
+        pol = self.cfg.flush_policy
+        if pol == "mem":
+            return max(nonempty, key=lambda t: t.mem_bytes)
+        if pol == "lsn":
+            return min(nonempty, key=lambda t: t.min_lsn)
+        # opt: flush the tree whose memory ratio most exceeds its optimal
+        # write-rate-proportional ratio a_i_opt = r_i / sum_j r_j.
+        rates = {t.name: sum(b for _, b in self._rate_win[t.name])
+                 for t in nonempty}
+        total_rate = sum(rates.values())
+        used = {t.name: t.mem_bytes for t in nonempty}
+        total_used = sum(used.values())
+        if total_rate == 0 or total_used == 0:
+            return min(nonempty, key=lambda t: t.min_lsn)
+        best, best_gap = None, None
+        for t in nonempty:
+            a = used[t.name] / total_used
+            a_opt = rates[t.name] / total_rate
+            gap = a - a_opt
+            if best_gap is None or gap > best_gap:
+                best, best_gap = t, gap
+        return best
+
+    def _enforce_log(self) -> None:
+        cfg = self.cfg
+        guard = 0
+        while self.log_length > cfg.mem_flush_threshold * cfg.max_log_bytes \
+                and guard < 1000:
+            guard += 1
+            m = self.min_lsn()
+            if m >= _INF:
+                break
+            tree = min((t for t in self.trees.values()
+                        if not t.mem.is_empty() or t.min_lsn < _INF),
+                       key=lambda t: t.min_lsn, default=None)
+            if tree is None or tree.mem.is_empty():
+                break
+            self._pre_flush_sample(tree)
+            freed = tree.flush(trigger="log", log_pos=self.log_pos,
+                               max_log_bytes=cfg.max_log_bytes,
+                               total_write_mem=self.write_memory_bytes,
+                               beta=cfg.beta,
+                               forced_kind=cfg.forced_flush_kind)
+            self._maintain(tree)
+            if freed == 0:
+                break
+
+    def _maintain(self, tree: LSMTree) -> None:
+        tree.maintain(self._tree_share(tree))
+
+    # -- reads -----------------------------------------------------------------------
+    def lookup(self, tree_name: str, key: int, *, op: bool = True):
+        if op:
+            self.disk.stats.ops += 1
+        return self.trees[tree_name].lookup(int(key))
+
+    def scan(self, tree_name: str, lo: int, n: int, *, op: bool = True):
+        if op:
+            self.disk.stats.ops += 1
+        return self.trees[tree_name].scan(int(lo), int(n))
+
+    # -- reporting ----------------------------------------------------------------------
+    def sync_mem_stats(self) -> None:
+        """Mirror per-component memory-merge work into the global counters
+        (CPU cost of §4.1 memory merges — Fig. 8's overhead)."""
+        self.disk.stats.entries_merged_mem = sum(
+            t.mem.stats.entries_merged for t in self.trees.values()
+            if hasattr(t.mem, "stats"))
+
+    def elapsed(self):
+        return self.cfg.time_model.elapsed(self.disk.stats,
+                                           scheme=self.cfg.scheme)
+
+    def throughput(self, prev_stats=None) -> float:
+        stats = self.disk.stats if prev_stats is None \
+            else self.disk.stats.delta(prev_stats)
+        io, cpu = self.cfg.time_model.elapsed(stats, scheme=self.cfg.scheme)
+        t = max(io, cpu, 1e-9)
+        return stats.ops / t

@@ -1,0 +1,299 @@
+"""LSMTree: one tree = memory component + grouped L0 + disk levels (§4).
+
+All disk I/O is accounted through the shared ``Disk`` (page pins via the
+buffer cache, flush/merge writes). Bloom filters are probed per SSTable for
+point lookups with a simulated 1% false-positive rate. Per-tree statistics
+feed the flush policies (§4.2) and the memory tuner (§5).
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cache import Disk
+from .grouped_l0 import FlatL0, GroupedL0
+from .levels import DiskLevels
+from .memtable import MemComponentBase, PartitionedMemComponent
+from .sstable import merge_runs, partition_run
+
+
+@dataclass
+class TreeStats:
+    """Per-tree counters over the lifetime (window deltas taken by callers)."""
+
+    entries_written: int = 0
+    bytes_written: int = 0
+    merge_pages_written: int = 0
+    merge_pages_read: int = 0
+    bytes_flushed_mem: int = 0
+    bytes_flushed_log: int = 0
+    lookups: int = 0
+
+
+def _bloom_false_positive(sst_id: int, key: int, fpr_permille: int = 10) -> bool:
+    """Deterministic pseudo-random 1% bloom false positive."""
+    h = zlib.crc32(np.int64(key).tobytes() + np.int64(sst_id).tobytes())
+    return (h % 1000) < fpr_permille
+
+
+class LSMTree:
+    def __init__(self, name: str, *, disk: Disk, entry_bytes: int,
+                 mem_component: MemComponentBase,
+                 sstable_bytes: int,
+                 size_ratio: int = 10,
+                 l0_max_groups: int = 4,
+                 l0_target_groups: int = 2,
+                 l0_greedy: bool = True,
+                 l0_grouped: bool = True,
+                 dynamic_levels: bool = True,
+                 static_num_levels: int | None = None,
+                 bloom_fpr_permille: int = 10):
+        self.name = name
+        self.disk = disk
+        self.entry_bytes = entry_bytes
+        self.mem = mem_component
+        self.sstable_bytes = sstable_bytes
+        self.l0 = GroupedL0() if l0_grouped else FlatL0()
+        self.l0_max_groups = l0_max_groups
+        self.l0_target_groups = l0_target_groups
+        self.l0_greedy = l0_greedy
+        self.levels = DiskLevels(size_ratio=size_ratio,
+                                 dynamic=dynamic_levels,
+                                 static_num_levels=static_num_levels)
+        self.stats = TreeStats()
+        self.bloom_fpr_permille = bloom_fpr_permille
+        # §4.1.4 adaptive flush window: (log_pos, bytes) of recent partial flushes
+        self.partial_flush_window: list = []
+
+    # -- properties used by policies/tuner -------------------------------------
+    @property
+    def mem_bytes(self) -> int:
+        return self.mem.used_bytes
+
+    @property
+    def min_lsn(self) -> int:
+        # Log truncation only needs the *memory* component's min LSN: data in
+        # L0/levels is already durable on disk.
+        return self.mem.min_lsn
+
+    @property
+    def last_level_bytes(self) -> int:
+        if self.levels.num_levels == 0:
+            return 0
+        return self.levels.level_bytes(self.levels.num_levels - 1)
+
+    @property
+    def disk_bytes(self) -> int:
+        return self.levels.total_bytes + self.l0.total_bytes
+
+    # -- write path -------------------------------------------------------------
+    def write_batch(self, keys, vals, lsn0: int) -> None:
+        self.mem.write(keys, vals, lsn0)
+        n = len(keys)
+        self.stats.entries_written += n
+        self.stats.bytes_written += n * self.entry_bytes
+
+    # -- flushes (§4.1.1 / §4.1.4) -----------------------------------------------
+    def _emit_flush(self, runs, *, trigger: str, log_pos: int) -> int:
+        """Partition runs into disk SSTables, write them, insert into L0.
+
+        Returns bytes flushed.
+        """
+        total = 0
+        for keys, vals, lsn_min, lsn_max in runs:
+            if len(keys) == 0:
+                continue
+            for sst in partition_run(keys, vals, lsn_min, lsn_max,
+                                     self.entry_bytes, self.disk.page_bytes,
+                                     self.sstable_bytes):
+                self.disk.write_sst(sst, flush=True)
+                self.l0.insert(sst)
+                total += sst.size_bytes
+        if trigger == "mem":
+            self.stats.bytes_flushed_mem += total
+            self.disk.stats.bytes_flushed_mem += total
+            self.disk.stats.flushes_mem += 1
+        else:
+            self.stats.bytes_flushed_log += total
+            self.disk.stats.bytes_flushed_log += total
+            self.disk.stats.flushes_log += 1
+        return total
+
+    def flush(self, *, trigger: str, log_pos: int, max_log_bytes: int,
+              total_write_mem: int, beta: float = 0.5,
+              forced_kind: str | None = None) -> int:
+        """Flush per §4.1: memory-triggered → partial round-robin; log-
+        triggered → adaptive partial(min-LSN)/full via the β window."""
+        if isinstance(self.mem, PartitionedMemComponent):
+            if forced_kind is None:
+                if trigger == "mem":
+                    kind = "partial"
+                else:
+                    # §4.1.4: window of recently partially-flushed bytes
+                    self.partial_flush_window = [
+                        (p, b) for p, b in self.partial_flush_window
+                        if p > log_pos - max_log_bytes]
+                    recent = sum(b for _, b in self.partial_flush_window)
+                    kind = ("partial" if recent > beta * total_write_mem
+                            else "full")
+            else:
+                kind = forced_kind
+            if kind == "partial":
+                runs = (self.mem.flush_partial() if trigger == "mem"
+                        else self.mem.flush_min_lsn())
+            elif kind == "partial_rr":
+                runs = self.mem.flush_partial()
+            elif kind == "partial_oldest":
+                runs = self.mem.flush_min_lsn()
+            else:
+                runs = self.mem.flush_full()
+            flushed = self._emit_flush(runs, trigger=trigger, log_pos=log_pos)
+            if kind != "full" and flushed:
+                self.partial_flush_window.append((log_pos, flushed))
+            return flushed
+        # Monolithic components: always a full flush.
+        runs = self.mem.flush_full()
+        return self._emit_flush(runs, trigger=trigger, log_pos=log_pos)
+
+    # -- merges (maintenance) -----------------------------------------------------
+    def _merge_write_out(self, keys, vals, lsn_min, lsn_max):
+        outs = partition_run(keys, vals, lsn_min, lsn_max, self.entry_bytes,
+                             self.disk.page_bytes, self.sstable_bytes)
+        for sst in outs:
+            self.disk.write_sst(sst, flush=False)
+            self.stats.merge_pages_written += sst.num_pages + sst.bloom_pages()
+        return outs
+
+    def merge_l0_once(self) -> bool:
+        if self.l0.num_groups == 0:
+            return False
+        ti = self.levels.l0_target_level()
+        if self.levels.num_levels == 0:
+            self.levels.adjust(self.mem_bytes)
+            ti = self.levels.l0_target_level()
+        target = self.levels.levels[ti]
+        l0_tables, (a, b) = self.l0.pick_merge(target, greedy=self.l0_greedy)
+        if not l0_tables:
+            return False
+        runs = [(t.keys, t.vals) for t in l0_tables]
+        read = list(l0_tables)
+        lo = min(t.min_key for t in l0_tables)
+        hi = max(t.max_key for t in l0_tables)
+        # Figure 4: while deleting L1, pull overlapping L1 SSTables along.
+        mid_tables = []
+        if ti == 1:
+            mid_tables = self.levels.overlapping_in(0, lo, hi)
+            runs += [(t.keys, t.vals) for t in mid_tables]
+            read += mid_tables
+            lo = min([lo] + [t.min_key for t in mid_tables])
+            hi = max([hi] + [t.max_key for t in mid_tables])
+        olds = self.levels.overlapping_in(ti, lo, hi)
+        runs += [(t.keys, t.vals) for t in olds]
+        read += olds
+        for t in read:
+            self.disk.merge_read_sst(t)
+        keys, vals = merge_runs(runs)
+        self.disk.stats.entries_merged_disk += sum(len(r[0]) for r in runs)
+        lsn_min = min(t.lsn_min for t in read)
+        lsn_max = max(t.lsn_max for t in read)
+        outs = self._merge_write_out(keys, vals, lsn_min, lsn_max)
+        self.levels.replace(ti, olds, outs)
+        if mid_tables:
+            self.levels.remove_from(0, mid_tables)
+        self.l0.remove(l0_tables)
+        for t in read:
+            self.disk.drop_sst(t)
+        return True
+
+    def merge_level_once(self, i: int) -> None:
+        victim = self.levels.greedy_victim(i)
+        olds = self.levels.overlapping_in(i + 1, victim.min_key, victim.max_key)
+        for t in [victim] + olds:
+            self.disk.merge_read_sst(t)
+        runs = [(victim.keys, victim.vals)] + [(t.keys, t.vals) for t in olds]
+        keys, vals = merge_runs(runs)
+        self.disk.stats.entries_merged_disk += sum(len(r[0]) for r in runs)
+        outs = self._merge_write_out(
+            keys, vals, min(t.lsn_min for t in [victim] + olds),
+            max(t.lsn_max for t in [victim] + olds))
+        self.levels.replace(i + 1, olds, outs)
+        self.levels.remove_from(i, [victim])
+        for t in [victim] + olds:
+            self.disk.drop_sst(t)
+
+    def maintain(self, write_mem_share: float) -> None:
+        """Run merges until structural invariants hold (simulated background
+        threads: memory merges, L0 merges, level merges, L1-drain merges)."""
+        if isinstance(self.mem, PartitionedMemComponent):
+            if self.mem.over_active_limit():
+                self.mem.seal_active()
+            self.mem.maintain()
+        self.levels.adjust(write_mem_share)
+        l0_bytes_budget = max(write_mem_share, 4 * self.sstable_bytes)
+        guard = 0
+        while guard < 10_000:
+            guard += 1
+            if (self.l0.num_groups >= max(2, self.l0_target_groups)
+                    or self.l0.total_bytes > l0_bytes_budget):
+                if self.merge_l0_once():
+                    continue
+            over = self.levels.over_full()
+            if over:
+                self.merge_level_once(over[0])
+                continue
+            # low-priority drain of L1 while it is being deleted (§4.1.3)
+            if self.levels.deleting_l1 and self.levels.num_levels >= 2 \
+                    and self.levels.levels[0]:
+                self.merge_level_once(0)
+                self.levels.adjust(write_mem_share)
+                continue
+            break
+        self.levels.adjust(write_mem_share)
+
+    # -- reads ---------------------------------------------------------------
+    def lookup(self, key: int):
+        self.stats.lookups += 1
+        found, val = self.mem.lookup(key)
+        if found:
+            return True, val
+        for sst in self.l0.tables_covering(key) + self.levels.tables_covering(key):
+            self.disk.query_pin(sst.sst_id, -1)          # bloom filter pages
+            hit, val, page = sst.lookup(key)
+            if hit or _bloom_false_positive(sst.sst_id, key,
+                                            self.bloom_fpr_permille):
+                self.disk.query_pin(sst.sst_id, page)    # leaf page
+                if hit:
+                    return True, val
+        return False, 0
+
+    def scan(self, lo: int, n_entries: int):
+        """Range scan with reconciliation: pins the pages of every
+        overlapping disk component, merges all runs newest-first, and
+        returns the number of live entries in the range."""
+        self.stats.lookups += 1
+        hi = lo + n_entries  # key-space width proxy (uniform key density)
+        runs = []
+        if hasattr(self.mem, "scan_runs"):
+            runs.extend(self.mem.scan_runs(lo, hi - 1))
+        else:  # monolithic baselines: probe the dict directly
+            ks = np.array([k for k in getattr(self.mem, "data", {})
+                           if lo <= k < hi], np.int64)
+            if len(ks):
+                ks.sort()
+                runs.append((ks, ks))
+        for sst in (self.l0.tables_overlapping(lo, hi - 1)
+                    + self.levels.tables_overlapping(lo, hi - 1)):
+            i = int(np.searchsorted(sst.keys, lo))
+            j = int(np.searchsorted(sst.keys, hi))
+            if j <= i:
+                continue
+            epp = sst.entries_per_page
+            for p in range(i // epp, (j - 1) // epp + 1):
+                self.disk.query_pin(sst.sst_id, p)
+            runs.append((sst.keys[i:j], sst.vals[i:j]))
+        if not runs:
+            return 0
+        keys, _ = merge_runs(runs)
+        return int(len(keys))

@@ -1,0 +1,87 @@
+"""Memory-tuner cost derivatives (§5.2, §5.3) — pure, jittable JAX.
+
+All estimators work from runtime statistics collected over one tuning cycle;
+no workload knowledge is required (the paper's "white-box" property).
+
+write'(x):  Eq. 4/5 —
+    write'_i(x) = - merge_i(x) / (x * ln(|L_Ni| / (a_i x)))
+                  * flush_mem_i / (flush_mem_i + flush_log_i)
+
+read'(x):   Eq. 6 —
+    read'(x) = (saved_q + saved_m)/sim + write'(x) * read_m(x)/merge(x)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class TunerStats:
+    """Statistics from one tuning cycle (Table 2 of the paper).
+
+    Per-tree arrays (length K): merge_pages_per_op, last_level_bytes, alloc
+    (a_i), flush_mem_bytes, flush_log_bytes. Scalars: x (write memory),
+    sim_bytes, saved_q/saved_m (pages/op from the ghost cache), read_m
+    (merge disk reads per op), merge (merge disk writes per op, all trees).
+    """
+
+    x: float
+    merge_pages_per_op: np.ndarray
+    last_level_bytes: np.ndarray
+    alloc: np.ndarray
+    flush_mem_bytes: np.ndarray
+    flush_log_bytes: np.ndarray
+    sim_bytes: float
+    saved_q_per_op: float
+    saved_m_per_op: float
+    read_m_per_op: float
+    merge_per_op: float
+
+
+@jax.jit
+def write_derivative(x, merge_pages_per_op, last_level_bytes, alloc,
+                     flush_mem_bytes, flush_log_bytes):
+    """Equations 4+5 (pages/op per byte of write memory; negative)."""
+    x = jnp.asarray(x, jnp.float64) if jax.config.read("jax_enable_x64") \
+        else jnp.asarray(x, jnp.float32)
+    merge = jnp.asarray(merge_pages_per_op, x.dtype)
+    lN = jnp.asarray(last_level_bytes, x.dtype)
+    a = jnp.asarray(alloc, x.dtype)
+    fm = jnp.asarray(flush_mem_bytes, x.dtype)
+    fl = jnp.asarray(flush_log_bytes, x.dtype)
+    # ln(|L_N| / (a*x)); the paper assumes a*x < |L_N|. Clamp to keep the
+    # estimate sane when a tree is still tiny.
+    ratio = jnp.maximum(lN / jnp.maximum(a * x, 1.0), jnp.e)
+    scale = jnp.where(fm + fl > 0, fm / jnp.maximum(fm + fl, 1e-30), 1.0)
+    per_tree = -merge / (x * jnp.log(ratio)) * scale
+    return jnp.sum(per_tree)
+
+
+@jax.jit
+def read_derivative(write_prime, saved_q_per_op, saved_m_per_op, sim_bytes,
+                    read_m_per_op, merge_per_op):
+    """Equation 6 (pages/op per byte of write memory)."""
+    f32 = jnp.asarray(write_prime).dtype
+    saved = (jnp.asarray(saved_q_per_op, f32)
+             + jnp.asarray(saved_m_per_op, f32))
+    ghost_term = saved / jnp.maximum(jnp.asarray(sim_bytes, f32), 1.0)
+    merge_term = jnp.where(
+        merge_per_op > 0,
+        write_prime * read_m_per_op / jnp.maximum(merge_per_op, 1e-30), 0.0)
+    return ghost_term + merge_term
+
+
+def cost_derivative(stats: TunerStats, omega: float = 1.0,
+                    gamma: float = 1.0) -> tuple:
+    """cost'(x) = ω·write'(x) + γ·read'(x). Returns (cost', write', read')."""
+    wp = write_derivative(stats.x, stats.merge_pages_per_op,
+                          stats.last_level_bytes, stats.alloc,
+                          stats.flush_mem_bytes, stats.flush_log_bytes)
+    rp = read_derivative(wp, stats.saved_q_per_op, stats.saved_m_per_op,
+                         stats.sim_bytes, stats.read_m_per_op,
+                         stats.merge_per_op)
+    return (float(omega * wp + gamma * rp), float(wp), float(rp))

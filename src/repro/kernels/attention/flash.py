@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: flash attention (online softmax over KV tiles).
+
+Grid (BH, nq, nk): each step loads one [BQ, hd] query tile and one
+[BK, hd] KV tile into VMEM, updates the running (acc, m, l) online-softmax
+state in VMEM scratch, and writes the normalized output at the last KV
+step. Causal + sliding-window masking and gemma2's score softcap are
+compile-time options. MXU work: the [BQ,hd]x[hd,BK] score matmul and the
+[BQ,BK]x[BK,hd] value matmul; block sizes default to 128/256 so both fit
+the 128x128 systolic tiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
+                  causal, window, softcap, bq, bk, nk):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    q = q_ref[0]                                   # [BQ, hd]
+    k = k_ref[0]                                   # [BK, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s *= q.shape[-1] ** -0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kp = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    keep = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        keep &= kp <= qp
+        if window > 0:
+            keep &= kp > qp - window
+    s = jnp.where(keep, s, NEG_INF)
+    m_new = jnp.maximum(m[...], s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m[...] - m_new)
+    l[...] = l[...] * corr + p.sum(axis=-1)
+    acc[...] = acc[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v_ref.dtype), v_ref[0],
+        preferred_element_type=jnp.float32)
+    m[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        o_ref[0] = (acc[...] / jnp.maximum(l[...], 1e-30)[:, None]) \
+            .astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk",
+                                   "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal=True, window=0, softcap=0.0,
+                         bq=128, bk=128, interpret=True):
+    """q: [BH, Sq, hd]; k,v: [BH, Sk, hd] (GQA pre-expanded). -> [BH,Sq,hd]"""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    grid = (bh, sq // bq, sk // bk)
+    kernel = partial(_flash_kernel, causal=causal, window=window,
+                     softcap=softcap, bq=bq, bk=bk, nk=sk // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[                  # VMEM online-softmax state
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""jit'd wrapper: [B,S,H,hd] flash attention with GQA expansion and head-dim
+padding to the TPU lane width (128)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    bq=128, bk=128, interpret=True):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd] with H % KV == 0. -> [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    hd_pad = -(-hd // 128) * 128 if hd > 128 or hd % 128 else hd
+    if hd_pad != hd:
+        pad = [(0, 0)] * 3 + [(0, hd_pad - hd)]
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, sq, q.shape[-1])
+    kb = k.transpose(0, 2, 1, 3).reshape(b * h, sk, k.shape[-1])
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, sk, v.shape[-1])
+    # scale must use the ORIGINAL head dim: pre-scale q accordingly
+    if hd_pad != hd:
+        qb = qb * ((hd_pad / hd) ** 0.5)
+    o = flash_attention_bhsd(qb, kb, vb, causal=causal, window=window,
+                             softcap=softcap, bq=bq, bk=bk,
+                             interpret=interpret)
+    o = o.reshape(b, h, sq, -1).transpose(0, 2, 1, 3)
+    return o[..., :hd]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / softcap)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q,k,v: [B, S, H, hd] (same H — expand GQA beforehand)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    sq, sk = q.shape[1], k.shape[1]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    keep = jnp.ones((sq, sk), bool)
+    if causal:
+        keep &= kp <= qp
+        if window > 0:
+            keep &= kp > qp - window
+    s = jnp.where(keep[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshk->bqhk", w.astype(v.dtype), v)

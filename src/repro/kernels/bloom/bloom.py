@@ -1,0 +1,98 @@
+"""Pallas TPU kernels: Bloom filter build + probe.
+
+TPU adaptation: no scatter/gather by data-dependent addresses (that is a
+CUDA idiom). Both directions run through MXU one-hot matmuls over the
+filter's factorized [128 rows x W cols] layout:
+
+  build:  counts += onehot_rows^T @ onehot_cols      (per key-tile)
+  probe:  rows = onehot_rows @ filter ; value = sum(rows * onehot_cols)
+
+The filter stays resident in VMEM across grid steps (accumulator pattern:
+initialized at step 0, revisited by every key tile).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import C1, C2
+
+
+def _hash_onehots(keys, n_slots, w, k_hashes):
+    """Per key and hash j: row/col one-hots. keys [K] -> ([K*k,128],[K*k,W])."""
+    h1 = (keys * C1) % n_slots
+    h2 = ((keys * C2) | 1) % n_slots
+    j = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], k_hashes), 1)
+    slots = (h1[:, None] + j * h2[:, None]) % n_slots            # [K, k]
+    slots = slots.reshape(-1)                                    # [K*k]
+    row = slots // w
+    col = slots % w
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (slots.shape[0], 128), 1)
+    c_iota = jax.lax.broadcasted_iota(jnp.int32, (slots.shape[0], w), 1)
+    oh_r = (row[:, None] == r_iota).astype(jnp.float32)
+    oh_c = (col[:, None] == c_iota).astype(jnp.float32)
+    return oh_r, oh_c
+
+
+def _build_kernel(keys_ref, filt_ref, *, n_slots, w, k_hashes):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        filt_ref[...] = jnp.zeros_like(filt_ref)
+
+    keys = keys_ref[...].reshape(-1)
+    oh_r, oh_c = _hash_onehots(keys, n_slots, w, k_hashes)
+    counts = jax.lax.dot(oh_r.T, oh_c,
+                         precision=jax.lax.Precision.HIGHEST)    # [128, W]
+    filt_ref[...] += counts.astype(jnp.int32)
+
+
+def _probe_kernel(keys_ref, filt_ref, out_ref, *, n_slots, w, k_hashes):
+    keys = keys_ref[...].reshape(-1)
+    k = keys.shape[0]
+    oh_r, oh_c = _hash_onehots(keys, n_slots, w, k_hashes)
+    rows = jax.lax.dot(oh_r, filt_ref[...].astype(jnp.float32),
+                       precision=jax.lax.Precision.HIGHEST)      # [K*k, W]
+    vals = jnp.sum(rows * oh_c, axis=-1).reshape(k, k_hashes)
+    out_ref[...] = jnp.all(vals > 0, axis=-1).astype(jnp.int32)[None, :]
+
+
+@partial(jax.jit, static_argnames=("n_slots", "k_hashes", "tile",
+                                   "interpret"))
+def build_filter(keys, *, n_slots: int, k_hashes: int = 7, tile: int = 256,
+                 interpret: bool = True):
+    """keys: [N] (N % tile == 0, pad with a key whose slots you tolerate);
+    returns int32 counts [128, n_slots//128]."""
+    n = keys.shape[0]
+    assert n % tile == 0 and n_slots % 128 == 0
+    w = n_slots // 128
+    return pl.pallas_call(
+        partial(_build_kernel, n_slots=n_slots, w=w, k_hashes=k_hashes),
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((128, w), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((128, w), jnp.int32),
+        interpret=interpret,
+    )(keys.reshape(1, -1))
+
+
+@partial(jax.jit, static_argnames=("k_hashes", "tile", "interpret"))
+def probe_filter(filt, keys, *, k_hashes: int = 7, tile: int = 256,
+                 interpret: bool = True):
+    """filt [128, W]; keys [K] (K % tile == 0) -> int32 mask [K]."""
+    k = keys.shape[0]
+    assert k % tile == 0
+    rows, w = filt.shape
+    n_slots = rows * w
+    out = pl.pallas_call(
+        partial(_probe_kernel, n_slots=n_slots, w=w, k_hashes=k_hashes),
+        grid=(k // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i)),
+                  pl.BlockSpec((128, w), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.int32),
+        interpret=interpret,
+    )(keys.reshape(1, -1), filt)
+    return out.reshape(-1)

@@ -1,0 +1,44 @@
+"""jit'd wrappers for the Bloom kernels, with padding and a numpy facade
+used by the LSM engine when running with --device-kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bloom import build_filter, probe_filter
+from .ref import build_ref, probe_ref
+
+
+def slots_for(n_keys: int, bits_per_key: int = 10) -> int:
+    return max(128, -(-n_keys * bits_per_key // 128) * 128)
+
+
+def bloom_build(keys, *, bits_per_key: int = 10, k_hashes: int = 7,
+                use_kernel: bool = True, interpret: bool = True):
+    keys = jnp.asarray(keys, jnp.int32)
+    n_slots = slots_for(keys.shape[0], bits_per_key)
+    tile = 256
+    pad = (-keys.shape[0]) % tile
+    if pad:
+        # pad by repeating the first key (idempotent for membership)
+        keys = jnp.concatenate([keys, jnp.broadcast_to(keys[:1], (pad,))])
+    if use_kernel:
+        return build_filter(keys, n_slots=n_slots, k_hashes=k_hashes,
+                            interpret=interpret)
+    return build_ref(keys, n_slots, k_hashes)
+
+
+def bloom_probe(filt, keys, *, k_hashes: int = 7, use_kernel: bool = True,
+                interpret: bool = True):
+    keys = jnp.asarray(keys, jnp.int32)
+    n = keys.shape[0]
+    tile = 256
+    pad = (-n) % tile
+    if pad:
+        keys = jnp.concatenate([keys, jnp.zeros((pad,), jnp.int32)])
+    if use_kernel:
+        out = probe_filter(filt, keys, k_hashes=k_hashes,
+                           interpret=interpret)
+    else:
+        out = probe_ref(filt, keys, k_hashes)
+    return np.asarray(out[:n]).astype(bool)

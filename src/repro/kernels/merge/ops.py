@@ -1,0 +1,102 @@
+"""jit'd wrappers: full sorted-run merge composed from kernel tile merges.
+
+``merge_sorted_runs`` merges two sorted non-negative int32 runs:
+merge-path *diagonal* splits (vectorized binary search, one per output
+tile) bound every tile's work to exactly ``tile`` outputs, then the Pallas
+kernel merges each co-tile pair in VMEM. Ties resolve toward run A (the
+newer run); the global keep-mask drops duplicate keys (reconciliation).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .merge import merge_tiles
+from .ref import merge_tiles_ref
+
+INT_MAX = np.int32(2**31 - 1)
+
+
+def _diag_splits(ka, kb, diags):
+    """For each output diagonal d, the largest ai with ka[ai-1] <= kb[d-ai]
+    (run-A priority). Vectorized binary search (max-true)."""
+    na, nb = ka.shape[0], kb.shape[0]
+    lo = jnp.maximum(0, diags - nb)
+    hi = jnp.minimum(diags, na)
+
+    int_min = np.int32(-2**31)
+
+    def a_at(i):        # ka[i-1], -inf sentinel below the run
+        return jnp.where(i <= 0, int_min, ka[jnp.clip(i - 1, 0, na - 1)])
+
+    def b_at(i):        # kb[i], +inf sentinel past the run
+        return jnp.where(i >= nb, INT_MAX, kb[jnp.clip(i, 0,
+                                               max(nb - 1, 0))])
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        ok = a_at(mid) <= b_at(diags - mid)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
+
+    lo, hi = jax.lax.fori_loop(0, 32, body, (lo, hi))
+    return lo
+
+
+def _gather_window(x, starts, lens, width, fill):
+    idx = starts[:, None] + jnp.arange(width)[None, :]
+    valid = jnp.arange(width)[None, :] < lens[:, None]
+    safe = jnp.clip(idx, 0, max(x.shape[0] - 1, 0))
+    return jnp.where(valid, x[safe], fill)
+
+
+@partial(jax.jit, static_argnames=("tile", "use_kernel", "interpret"))
+def merge_sorted_runs(ka, va, kb, vb, *, tile: int = 512,
+                      use_kernel: bool = True, interpret: bool = True):
+    """Merge two sorted non-negative int32 runs with newest-wins dedup.
+
+    Returns (keys [ceil((Na+Nb)/tile)*tile], vals, keep); padding slots
+    carry key=INT_MAX and keep=False.
+    """
+    na, nb = ka.shape[0], kb.shape[0]
+    if na == 0 or nb == 0:                  # degenerate: copy the other run
+        keys = jnp.concatenate([ka, kb])
+        vals = jnp.concatenate([va, vb])
+        g0 = max(1, -(-keys.shape[0] // tile))
+        pad = g0 * tile - keys.shape[0]
+        keys = jnp.pad(keys, (0, pad), constant_values=INT_MAX)
+        vals = jnp.pad(vals, (0, pad))
+        return keys, vals, keys != INT_MAX
+    n = na + nb
+    g = -(-n // tile)
+    diags = jnp.minimum(jnp.arange(g + 1) * tile, n)
+    ai = _diag_splits(ka, kb, diags)
+    bi = diags - ai
+    a_len, b_len = jnp.diff(ai), jnp.diff(bi)
+    ka_t = _gather_window(ka, ai[:-1], a_len, tile, INT_MAX)
+    va_t = _gather_window(va, ai[:-1], a_len, tile, 0)
+    kb_t = _gather_window(kb, bi[:-1], b_len, tile, INT_MAX)
+    vb_t = _gather_window(vb, bi[:-1], b_len, tile, 0)
+    if use_kernel:
+        keys2, vals2, _ = merge_tiles(ka_t, va_t, kb_t, vb_t,
+                                      interpret=interpret)
+    else:
+        keys2, vals2, _ = merge_tiles_ref(ka_t, va_t, kb_t, vb_t)
+    keys = keys2[:, :tile].reshape(-1)      # first `tile` outputs are real
+    vals = vals2[:, :tile].reshape(-1)
+    prev = jnp.concatenate([keys[:1] - 1, keys[:-1]])
+    keep = (keys != prev) & (keys != INT_MAX)
+    return keys, vals, keep
+
+
+def merge_runs_dedup(ka, va, kb, vb, **kw):
+    """Host-friendly wrapper returning dense deduped numpy arrays."""
+    keys, vals, keep = merge_sorted_runs(jnp.asarray(ka, jnp.int32),
+                                         jnp.asarray(va, jnp.int32),
+                                         jnp.asarray(kb, jnp.int32),
+                                         jnp.asarray(vb, jnp.int32), **kw)
+    keys, vals, keep = map(np.asarray, (keys, vals, keep))
+    return keys[keep], vals[keep]

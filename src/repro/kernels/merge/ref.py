@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the tile-merge kernel.
+
+Semantics: given two sorted int32 key tiles (with int32 payloads), produce
+the stable merged tile (a-keys first among equals — "newer run wins") plus
+a keep-mask that drops all but the first occurrence of each key (LSM
+reconciliation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_tiles_ref(ka, va, kb, vb):
+    """ka,kb: [G, Ba], [G, Bb] sorted int32 keys; va/vb payloads.
+
+    Returns (keys [G, Ba+Bb], vals, keep [G, Ba+Bb] bool).
+    """
+    ga, ba = ka.shape
+    _, bb = kb.shape
+    # target position of each a[i]: i + #{b < a[i]}  (strict: a wins ties)
+    rank_a = jnp.sum(kb[:, None, :] < ka[:, :, None], axis=-1) \
+        + jnp.arange(ba)[None, :]
+    # target of b[j]: j + #{a <= b[j]}
+    rank_b = jnp.sum(ka[:, None, :] <= kb[:, :, None], axis=-1) \
+        + jnp.arange(bb)[None, :]
+    n = ba + bb
+    keys = jnp.zeros((ga, n), ka.dtype)
+    vals = jnp.zeros((ga, n), va.dtype)
+    gi = jnp.arange(ga)[:, None]
+    keys = keys.at[gi, rank_a].set(ka).at[gi, rank_b].set(kb)
+    vals = vals.at[gi, rank_a].set(va).at[gi, rank_b].set(vb)
+    keep = jnp.concatenate(
+        [jnp.ones((ga, 1), bool), keys[:, 1:] != keys[:, :-1]], axis=1)
+    return keys, vals, keep

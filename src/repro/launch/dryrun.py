@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost analysis + roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod/--single-pod]
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.base import SHAPES, cells, get_config  # noqa: E402
+from repro.launch.inputs import (abstract_cache, abstract_state,  # noqa: E402
+                                 batch_specs, decode_inputs, sharded_bytes)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import num_params  # noqa: E402
+from repro.runtime.serving import make_prefill_step, make_serve_step  # noqa: E402
+from repro.runtime.sharding import activation_sharding, param_rules  # noqa: E402
+from repro.runtime.training import TrainConfig, make_train_step  # noqa: E402
+from repro.utils.flops import model_flops  # noqa: E402
+from repro.utils.hlo import analyze_hlo, roofline_terms  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _parse_override(s: str):
+    k, v = s.split("=", 1)
+    if v in ("true", "false"):
+        v = v == "true"
+    else:
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+    return k, v
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               save_hlo: bool = False, overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    model, params, opt, _, rules = abstract_state(
+        cfg, mesh, with_opt=shape.kind == "train", multi_pod=multi_pod)
+
+    with mesh, activation_sharding(mesh, rules):
+        if shape.kind == "train":
+            step = make_train_step(model, TrainConfig())
+            args = (params, opt, batch_specs(cfg, shape, mesh))
+            # donate params+opt: the step returns their updated versions
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(*args)
+        elif shape.kind == "prefill":
+            cache, _ = abstract_cache(model, cfg, shape, mesh, multi_pod)
+            step = make_prefill_step(model)
+            args = (params, cache, batch_specs(cfg, shape, mesh))
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(*args)
+        else:  # decode
+            cache, _ = abstract_cache(model, cfg, shape, mesh, multi_pod)
+            dec = decode_inputs(cfg, shape, mesh)
+            step = make_serve_step(model)
+            args = (params, cache, dec["token"], dec["pos"])
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(*args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # -- analyses ---------------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        mem_report = {k: int(getattr(mem, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        mem_report = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        cost_report = {k: float(ca[k]) for k in ("flops", "bytes accessed",
+                                                 "transcendentals")
+                       if k in ca}
+    except Exception as e:  # pragma: no cover
+        cost_report = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    costs = analyze_hlo(hlo, n_dev)
+    terms = roofline_terms(costs.dot_flops, costs.bytes_accessed,
+                           costs.collective_bytes)
+    n_params = num_params(model.param_specs())
+    mf = model_flops(cfg, shape, n_params)
+    hlo_total = costs.dot_flops * n_dev
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "compile_s": round(t_compile, 1),
+        "n_params": n_params,
+        "params_bytes_per_device": sharded_bytes(params, mesh),
+        "opt_bytes_per_device": sharded_bytes(opt, mesh) if opt else 0,
+        "memory_analysis": mem_report,
+        "cost_analysis_raw": cost_report,
+        "per_device": {
+            "dot_flops": costs.dot_flops,
+            "bytes_accessed": costs.bytes_accessed,
+            "collective_bytes": costs.collective_bytes,
+            "collectives": costs.per_collective_bytes,
+            "collective_counts": costs.collective_counts,
+        },
+        "roofline": terms,
+        "model_flops_total": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": mf / hlo_total if hlo_total else 0.0,
+        "trip_counts": costs.trip_counts,
+    }
+    if shape.kind in ("decode", "prefill"):
+        cache_bytes = sharded_bytes(cache, mesh)
+        report["cache_bytes_per_device"] = cache_bytes
+        # analytic step floor: read params once + stream the KV cache once
+        report["analytic_memory_floor_s"] = \
+            (report["params_bytes_per_device"] + cache_bytes) / 819e9
+    if save_hlo:
+        (RESULTS / f"{arch}__{shape_name}__{report['mesh']}.hlo.txt") \
+            .write_text(hlo)
+    return report
+
+
+def run_and_save(arch, shape_name, multi_pod, save_hlo=False,
+                 overrides=None, tag=""):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    mesh_tag = ("2x16x16" if multi_pod else "16x16") + tag
+    out = RESULTS / f"{arch}__{shape_name}__{mesh_tag}.json"
+    try:
+        rep = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                         save_hlo=save_hlo, overrides=overrides)
+        rep["mesh"] = mesh_tag
+        rep["overrides"] = overrides or {}
+        print(f"[ok] {arch} {shape_name} {mesh_tag}: "
+              f"compile={rep['compile_s']}s "
+              f"bottleneck={rep['roofline']['bottleneck']} "
+              f"frac={rep['roofline']['roofline_fraction']:.3f}")
+    except Exception as e:
+        rep = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[FAIL] {arch} {shape_name} {mesh_tag}: {type(e).__name__}: {e}")
+    out.write_text(json.dumps(rep, indent=2, default=float))
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override key=value (repeatable)")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    args = ap.parse_args()
+    overrides = dict(_parse_override(s) for s in args.override)
+    meshes = []
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    meshes = sorted(set(meshes))            # False (single) first
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    ok = fail = skip = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            mesh_tag = ("2x16x16" if mp else "16x16") + args.tag
+            out = RESULTS / f"{arch}__{shape}__{mesh_tag}.json"
+            if args.skip_existing and out.exists() and \
+                    "error" not in json.loads(out.read_text()):
+                skip += 1
+                continue
+            rep = run_and_save(arch, shape, mp, save_hlo=args.save_hlo,
+                               overrides=overrides, tag=args.tag)
+            ok += "error" not in rep
+            fail += "error" in rep
+    print(f"done: {ok} ok, {fail} failed, {skip} skipped")
+
+
+if __name__ == "__main__":
+    main()

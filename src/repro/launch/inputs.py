@@ -1,0 +1,99 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (with shardings) for every
+model input of every (arch x shape) cell — weak-type-correct, shardable, and
+allocation-free, so dry-runs never touch device memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import abstract_params, make_shardings
+from ..models.zoo import build_model
+from ..runtime.sharding import param_rules
+from ..runtime.training import opt_state_specs
+from .mesh import data_axes
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_pspec(mesh, batch):
+    axes = data_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return PS(axes) if batch % size == 0 else PS()
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """Training/prefill batch: tokens, labels, mask (+frontend embeds)."""
+    B, S = shape.global_batch, shape.seq_len
+    bp = _batch_pspec(mesh, B)
+    f = cfg.frontend_tokens if cfg.frontend else 0
+    text = S if cfg.family == "encdec" else S - f
+    out = {
+        "tokens": _sds((B, text), jnp.int32, mesh, PS(*bp, None)),
+        "labels": _sds((B, S), jnp.int32, mesh, PS(*bp, None)),
+        "mask": _sds((B, S), jnp.float32, mesh, PS(*bp, None)),
+    }
+    if cfg.frontend:
+        out["frontend_embeds"] = _sds((B, f, cfg.d_model), jnp.bfloat16,
+                                      mesh, PS(*bp, None, None))
+    return out
+
+
+def abstract_state(cfg: ModelConfig, mesh, *, with_opt: bool,
+                   multi_pod: bool):
+    """(params, opt, shardings) as ShapeDtypeStructs with shardings."""
+    rules = param_rules(fsdp=cfg.fsdp, multi_pod=multi_pod)
+    model = build_model(cfg)
+    pspec = model.param_specs()
+    p_sh = make_shardings(pspec, mesh, rules)
+    params = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract_params(pspec, cfg.param_dtype), p_sh)
+    opt = None
+    o_sh = None
+    if with_opt:
+        ospec = opt_state_specs(pspec, cfg)
+        o_sh = make_shardings(ospec, mesh, rules)
+        opt = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            abstract_params(ospec, cfg.optstate_dtype), o_sh)
+    return model, params, opt, (p_sh, o_sh), rules
+
+
+def abstract_cache(model, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   multi_pod: bool):
+    rules = param_rules(fsdp=cfg.fsdp, multi_pod=multi_pod)
+    cspec = model.cache_specs(shape.global_batch, shape.seq_len)
+    c_sh = make_shardings(cspec, mesh, rules)
+    cache = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract_params(cspec, cfg.compute_dtype), c_sh)
+    return cache, c_sh
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    B = shape.global_batch
+    bp = _batch_pspec(mesh, B)
+    return {
+        "token": _sds((B, 1), jnp.int32, mesh, PS(*bp, None)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def sharded_bytes(tree_abstract, mesh) -> int:
+    """Per-device bytes of a sharded abstract tree (analytic)."""
+    total = 0
+    n_dev = mesh.size
+    for leaf in jax.tree.leaves(tree_abstract):
+        sh = leaf.sharding
+        shard_shape = sh.shard_shape(leaf.shape)
+        total += int(np.prod(shard_shape)) * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,109 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Dry-run/§Roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES, all_archs, cells
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def load(mesh_tag: str) -> dict:
+    out = {}
+    for f in RESULTS.glob(f"*__{mesh_tag}.json"):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def one_sentence(r) -> str:
+    b = r["roofline"]["bottleneck"]
+    if b == "collective":
+        ar = r["per_device"]["collectives"]
+        top = max(ar, key=ar.get)
+        return (f"reduce {top} volume (resharding/overlap) — "
+                f"{ar[top]/1e9:.1f}GB/dev of {top}")
+    if b == "memory":
+        return "cut materialized activation/cache traffic (fusion, dtype, layout)"
+    return "compute-bound: increase per-chip utilization (larger tiles/batch)"
+
+
+def table(mesh_tag: str) -> str:
+    reps = load(mesh_tag)
+    skips = {(a, s): why for a, s, why in cells(include_skips=True) if why}
+    lines = [
+        f"### Roofline — mesh {mesh_tag} "
+        f"({'512' if 'x16x16' in mesh_tag and mesh_tag.startswith('2') else '256'} chips, "
+        "TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck |"
+        " roofline_frac | MODEL_FLOPS | useful/HLO | next move |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in all_archs():
+        for sname in SHAPES:
+            if (arch, sname) in skips:
+                lines.append(f"| {arch} | {sname} | — | — | — | skip | — | — "
+                             f"| — | {skips[(arch, sname)]} |")
+                continue
+            r = reps.get((arch, sname))
+            if r is None or "error" in r:
+                err = (r or {}).get("error", "missing")
+                lines.append(f"| {arch} | {sname} | ? | ? | ? | ERROR | ? | ? "
+                             f"| ? | {err[:60]} |")
+                continue
+            t = r["roofline"]
+            lines.append(
+                f"| {arch} | {sname} | {t['compute_s']:.4g} "
+                f"| {t['memory_s']:.4g} | {t['collective_s']:.4g} "
+                f"| {t['bottleneck']} | {t['roofline_fraction']:.3f} "
+                f"| {r['model_flops_total']:.3g} "
+                f"| {r['useful_flops_ratio']:.2f} | {one_sentence(r)} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh_tag: str) -> str:
+    reps = load(mesh_tag)
+    lines = [
+        f"### Dry-run — mesh {mesh_tag}",
+        "",
+        "| arch | shape | compile_s | params/dev MB | opt/dev MB "
+        "| arg bytes/dev GB | temp bytes/dev GB | collective GB/dev "
+        "(AR/AG/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, sname), r in sorted(reps.items()):
+        if "error" in r:
+            continue
+        ma = r.get("memory_analysis", {})
+        col = r["per_device"]["collectives"]
+        cg = "/".join(f"{col.get(k, 0)/1e9:.2f}"
+                      for k in ("all-reduce", "all-gather", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+        lines.append(
+            f"| {arch} | {sname} | {r['compile_s']} "
+            f"| {r['params_bytes_per_device']/1e6:.0f} "
+            f"| {r['opt_bytes_per_device']/1e6:.0f} "
+            f"| {ma.get('argument_size_in_bytes', 0)/1e9:.2f} "
+            f"| {ma.get('temp_size_in_bytes', 0)/1e9:.2f} | {cg} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--dryrun", action="store_true")
+    args = ap.parse_args()
+    if args.dryrun:
+        print(dryrun_table(args.mesh))
+    else:
+        print(table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

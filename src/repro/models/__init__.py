@@ -1,0 +1,5 @@
+from .params import (P, abstract_params, init_params, make_pspecs,  # noqa: F401
+                     make_shardings, num_params)
+from .transformer import CausalLM  # noqa: F401
+from .encdec import EncDecLM  # noqa: F401
+from .zoo import build_model  # noqa: F401

@@ -1,0 +1,242 @@
+"""Attention: GQA with RoPE, sliding-window + score softcap variants,
+full-softmax and chunked (flash-style, memory-bounded) implementations, and
+KV-cache decode. Pure JAX; the Pallas flash kernel in ``repro.kernels`` is
+the TPU-optimized drop-in for the same math (same oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, rope, softcap
+
+NEG_INF = -2.0e38
+
+
+def padded_heads(cfg):
+    """(h_pad, kv_pad): head counts padded to cfg.head_pad_to multiples.
+
+    Padded heads are masked to zero after attention, so they are
+    mathematically dead — this only buys TP divisibility (e.g. minicpm's
+    36 heads -> 48 over a 16-way model axis)."""
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    m = cfg.head_pad_to
+    if not m:
+        return h, kv
+    h_pad = -(-h // m) * m
+    kv_pad = kv if h_pad % kv == 0 else -(-kv // m) * m
+    return h_pad, kv_pad
+
+
+def attn_spec(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = padded_heads(cfg)
+    s = d ** -0.5
+    return {
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim"), scale=s),
+        "wk": P((d, kv, hd), ("embed", "kv_heads", "head_dim"), scale=s),
+        "wv": P((d, kv, hd), ("embed", "kv_heads", "head_dim"), scale=s),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed"),
+                scale=(h * hd) ** -0.5),
+    }
+
+
+def _expand_kv(k, n_rep: int):
+    """[B,S,KV,hd] -> [B,S,KV*n_rep,hd] by repeating each kv head."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)) \
+        .reshape(b, s, kv * n_rep, hd)
+
+
+def qkv(cfg, p, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, window: int, causal: bool = True):
+    """Causal (+ optional sliding window) mask: [.., Sq, Sk] bool keep."""
+    if not causal:
+        return jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1],
+                                            k_pos.shape[-1]), bool)
+    keep = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        keep &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return keep
+
+
+def full_attention(cfg, q, k, v, q_pos, k_pos, window: int = 0,
+                   softcap_val: float = 0.0, causal: bool = True):
+    """Reference full-softmax attention. q:[B,Sq,H,hd] k,v:[B,Sk,KV,hd]."""
+    h, kv = q.shape[2], k.shape[2]
+    k = _expand_kv(k, h // kv)
+    v = _expand_kv(v, h // kv)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    if softcap_val:
+        scores = softcap(scores, softcap_val)
+    keep = _mask(q_pos, k_pos, window, causal)[:, None, :, :]
+    scores = jnp.where(keep, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+
+def chunked_attention(cfg, q, k, v, q_pos, k_pos, window: int = 0,
+                      softcap_val: float = 0.0, causal: bool = True):
+    """Flash-style online-softmax attention, double scan over Q/KV chunks.
+
+    Never materializes the [Sq, Sk] score matrix; memory is bounded by
+    (chunk_q x chunk_kv). This is the XLA analogue of the Pallas kernel in
+    ``repro.kernels.attention`` and is used for long-context lowering.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    cq = min(cfg.attn_chunk_q, sq)
+    ck = min(cfg.attn_chunk_kv, sk)
+    assert sq % cq == 0 and sk % ck == 0, (sq, cq, sk, ck)
+    k = _expand_kv(k, h // kvh)
+    v = _expand_kv(v, h // kvh)
+    scale = hd ** -0.5
+    qc = q.reshape(b, sq // cq, cq, h, hd).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(b, sq // cq, cq).transpose(1, 0, 2)
+    kc = k.reshape(b, sk // ck, ck, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, sk // ck, ck, h, hd).transpose(1, 0, 3, 2, 4)
+    kp = k_pos.reshape(b, sk // ck, ck).transpose(1, 0, 2)
+
+    def q_block(_, qb):
+        qi, qpi = qb                                  # [B,H,cq,hd], [B,cq]
+
+        def kv_block(carry, kb):
+            acc, m, l = carry
+            ki, vi, kpi = kb
+            s = jnp.einsum("bhqk,bhsk->bhqs", qi, ki).astype(jnp.float32) \
+                * scale
+            if softcap_val:
+                s = softcap(s, softcap_val)
+            keep = _mask(qpi, kpi, window, causal)[:, None, :, :]
+            s = jnp.where(keep, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bhsk->bhqk", p.astype(vi.dtype), vi).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_block, (acc0, m0, l0), (kc, vc, kp))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, (qc, qp))   # [nq,B,H,cq,hd]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+    return out
+
+
+def full_attention_ds(cfg, q, k, v, q_pos, k_pos, window: int = 0,
+                      softcap_val: float = 0.0, causal: bool = True):
+    """Dim-major cache layout: k,v: [B,KV,hd,Sk] — the decode-optimized
+    layout. Two wins vs the baseline path: (1) scores consume K directly
+    (no [S,hd]->[hd,S] transpose copies of the whole cache per layer);
+    (2) GQA via grouped einsums — the KV cache is never expanded to H
+    heads (the baseline materializes an H/KV-times-larger copy).
+    q: [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    kv, sk = k.shape[1], k.shape[3]
+    rep = h // kv
+    q5 = q.reshape(b, sq, kv, rep, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkrd,bkds->bkrqs", q5, k).astype(jnp.float32) \
+        * scale
+    if softcap_val:
+        scores = softcap(scores, softcap_val)
+    keep = _mask(q_pos, k_pos, window, causal)[:, None, None, :, :]
+    scores = jnp.where(keep, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrqs,bkds->bqkrd", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention_block(cfg, p, x, positions, *, layer_window: int = 0,
+                    cache=None, impl: str = "auto", causal: bool = True):
+    """Full block: qkv -> attention -> out-proj. With ``cache`` (decode/
+    prefill-extend), k/v are written at ``positions`` into the cache.
+
+    cache: dict(k, v) in the layout given by cfg.kv_layout, or None.
+    Returns (out [B,S,d], new_cache).
+    """
+    dt = x.dtype
+    q, k, v = qkv(cfg, p, x, positions)
+    if cache is not None and cfg.kv_layout == "paged":
+        # Paged pool layout (the device-side analogue of the runtime's
+        # LSM-managed page tables): pool [P, page_tok, KV, hd] + per-row
+        # page table. Decode writes one token into its page (scatter) and
+        # gathers the row's pages into a dense view for attention.
+        pt = cfg.kv_page_tokens
+        kp, vp, table = cache["k_pool"], cache["v_pool"], cache["page_table"]
+        b = x.shape[0]
+        pos0 = positions[0, 0]
+        page = table[:, pos0 // pt]                     # [B] pool rows
+        off = pos0 % pt
+        kp = kp.at[page, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[page, off].set(v[:, 0].astype(vp.dtype))
+        k_all = kp[table].reshape(b, -1, *kp.shape[2:]).astype(dt)
+        v_all = vp[table].reshape(b, -1, *vp.shape[2:]).astype(dt)
+        k_pos = jnp.broadcast_to(jnp.arange(k_all.shape[1])[None, :],
+                                 (b, k_all.shape[1]))
+        out = full_attention(cfg, q, k_all, v_all, positions, k_pos,
+                             window=layer_window,
+                             softcap_val=cfg.attn_softcap, causal=causal)
+        out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+        return out, {"k_pool": kp, "v_pool": vp, "page_table": table}
+    ds = cache is not None and cfg.kv_layout == "ds"
+    if cache is not None:
+        ck, cv = cache["k"], cache["v"]
+        idx = positions[0]                      # same positions per batch row
+        if ds:                                  # cache: [B, KV, hd, S]
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.transpose(0, 2, 3, 1).astype(ck.dtype), idx[0], axis=3)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.transpose(0, 2, 3, 1).astype(cv.dtype), idx[0], axis=3)
+            sk = ck.shape[3]
+        else:                                   # cache: [B, S, KV, hd]
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), idx[0], axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), idx[0], axis=1)
+            sk = ck.shape[1]
+        k_all, v_all = ck.astype(dt), cv.astype(dt)
+        k_pos = jnp.broadcast_to(jnp.arange(sk)[None, :], (x.shape[0], sk))
+        new_cache = {"k": ck, "v": cv}
+    else:
+        k_all, v_all = k, v
+        k_pos = positions
+        new_cache = None
+    if ds:
+        out = full_attention_ds(cfg, q, k_all, v_all, positions, k_pos,
+                                window=layer_window,
+                                softcap_val=cfg.attn_softcap, causal=causal)
+    else:
+        use_chunked = (impl == "chunked"
+                       or (impl == "auto"
+                           and k_all.shape[1] > cfg.chunked_attn_threshold
+                           and x.shape[1] > 1))
+        fn = chunked_attention if use_chunked else full_attention
+        out = fn(cfg, q, k_all, v_all, positions, k_pos,
+                 window=layer_window, softcap_val=cfg.attn_softcap,
+                 causal=causal)
+    if cfg.head_pad_to and q.shape[2] != cfg.num_heads:
+        # padded heads are dead: zero them so wo receives no gradient
+        mask = (jnp.arange(q.shape[2]) < cfg.num_heads).astype(out.dtype)
+        out = out * mask[None, None, :, None]
+    out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+    return out, new_cache

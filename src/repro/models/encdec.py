@@ -1,0 +1,197 @@
+"""Encoder-decoder LM (seamless-m4t backbone). The audio frontend is a stub:
+``frontend_embeds`` [B, frames, d_model] are provided pre-computed.
+
+Decoder KV caches: self-attention cache (grows during decode) + cross-
+attention KV (computed once at prefill from the encoder output).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.sharding import constrain
+from .attention import attention_block, attn_spec, full_attention, qkv
+from .layers import (P, embed, embed_spec, mlp, mlp_spec, rmsnorm,
+                     rmsnorm_spec, unembed)
+
+
+def _enc_layer_spec(cfg):
+    return {"ln": rmsnorm_spec(cfg.d_model), "attn": attn_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def _dec_layer_spec(cfg):
+    return {"ln": rmsnorm_spec(cfg.d_model), "attn": attn_spec(cfg),
+            "lnx": rmsnorm_spec(cfg.d_model), "xattn": attn_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def _stack(tree, n):
+    return jax.tree.map(
+        lambda s: P((n,) + s.shape, ("layers",) + s.axes, init=s.init,
+                    scale=s.scale, dtype=s.dtype),
+        tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def _cross_attend(cfg, p, x, enc_k, enc_v):
+    """Cross attention: q from decoder x, precomputed encoder k/v."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    out = full_attention(cfg, q, enc_k.astype(dt), enc_v.astype(dt),
+                         jnp.zeros(x.shape[:2], jnp.int32),
+                         jnp.zeros(enc_k.shape[:2], jnp.int32),
+                         causal=False)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": embed_spec(cfg.padded_vocab, cfg.d_model),
+            "frontend_proj": {"w": P((cfg.d_model, cfg.d_model),
+                                     ("embed", None),
+                                     scale=cfg.d_model ** -0.5)},
+            "enc": _stack(_enc_layer_spec(cfg), cfg.enc_layers),
+            "enc_norm": rmsnorm_spec(cfg.d_model),
+            "dec": _stack(_dec_layer_spec(cfg), cfg.dec_layers),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        f = cfg.frontend_tokens
+        kvspec = {
+            "k": P((batch, max_len, kv, hd),
+                   ("batch", "kv_seq", "kv_heads", "head_dim"),
+                   init="zeros", dtype=cfg.compute_dtype),
+            "v": P((batch, max_len, kv, hd),
+                   ("batch", "kv_seq", "kv_heads", "head_dim"),
+                   init="zeros", dtype=cfg.compute_dtype)}
+        xspec = {
+            "k": P((batch, f, kv, hd),
+                   ("batch", "frames", "kv_heads", "head_dim"),
+                   init="zeros", dtype=cfg.compute_dtype),
+            "v": P((batch, f, kv, hd),
+                   ("batch", "frames", "kv_heads", "head_dim"),
+                   init="zeros", dtype=cfg.compute_dtype)}
+        return {"self": _stack(kvspec, cfg.dec_layers),
+                "cross": _stack(xspec, cfg.dec_layers)}
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, frontend_embeds):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = jnp.einsum("bfd,de->bfe", frontend_embeds.astype(dt),
+                       params["frontend_proj"]["w"].astype(dt))
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+        def body(x, p):
+            y, _ = attention_block(cfg, p["attn"],
+                                   rmsnorm(p["ln"], x, cfg.norm_eps), pos,
+                                   causal=False)
+            x = x + y
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), dt)
+            return x, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    def _precompute_cross_kv(self, params, enc_out):
+        cfg = self.cfg
+        b, f, _ = enc_out.shape
+        pos = jnp.zeros((b, f), jnp.int32)
+
+        def body(_, p):
+            _, k, v = qkv(cfg, p["xattn"], enc_out, pos)
+            return None, {"k": k, "v": v}
+
+        _, kv = jax.lax.scan(body, None, params["dec"])
+        return kv
+
+    # -- decoder -------------------------------------------------------------
+    def _decode_blocks(self, params, x, positions, self_cache, cross_kv):
+        cfg = self.cfg
+        use_cache = self_cache is not None
+
+        def body(x, xs):
+            p, sc, xkv = xs
+            y, nc = attention_block(cfg, p["attn"],
+                                    rmsnorm(p["ln"], x, cfg.norm_eps),
+                                    positions, cache=sc if use_cache else None)
+            x = x + y
+            x = constrain(x, "batch", None, None)
+            x = x + _cross_attend(cfg, p["xattn"],
+                                  rmsnorm(p["lnx"], x, cfg.norm_eps),
+                                  xkv["k"], xkv["v"])
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), x.dtype)
+            return x, nc if use_cache else 0
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+        sc = self_cache if use_cache else jnp.zeros((cfg.dec_layers,),
+                                                    jnp.int32)
+        x, new_sc = jax.lax.scan(body, x, (params["dec"], sc, cross_kv))
+        return x, (new_sc if use_cache else None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, x.dtype)
+        logits = constrain(logits, "batch", None, "vocab_logits")
+        logits = logits.astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            logits = jnp.where(jnp.arange(cfg.padded_vocab)
+                               < cfg.vocab_size, logits, -1e30)
+        return logits
+
+    # -- public API -----------------------------------------------------------
+    def apply(self, params, tokens, frontend_embeds=None):
+        """Training forward: encoder on frames, decoder teacher-forcing."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frontend_embeds)
+        cross_kv = self._precompute_cross_kv(params, enc_out)
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = embed(params["embed"], tokens, dt)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x, _ = self._decode_blocks(params, x, pos, None, cross_kv)
+        return self._logits(params, x)
+
+    def prefill(self, params, tokens, cache, frontend_embeds=None):
+        cfg = self.cfg
+        enc_out = self.encode(params, frontend_embeds)
+        cross_kv = self._precompute_cross_kv(params, enc_out)
+        cross_kv = jax.tree.map(
+            lambda a, c: a.astype(c.dtype), cross_kv, cache["cross"])
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = embed(params["embed"], tokens, dt)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x, self_c = self._decode_blocks(params, x, pos, cache["self"],
+                                        cross_kv)
+        logits = self._logits(params, x[:, -1:])
+        return logits, {"self": self_c, "cross": cross_kv}
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = embed(params["embed"], token, dt)
+        positions = jnp.broadcast_to(pos, (x.shape[0], 1)).astype(jnp.int32)
+        x, self_c = self._decode_blocks(params, x, positions, cache["self"],
+                                        cache["cross"])
+        logits = self._logits(params, x)
+        return logits, {"self": self_c, "cross": cache["cross"]}

@@ -1,0 +1,106 @@
+"""Parameter specs: one tree drives init, abstract (dry-run) params, and
+NamedShardings.
+
+Every model builds a pytree whose leaves are ``P(shape, axes)`` — logical
+axis names per dimension. From that single tree we derive:
+
+  * ``init_params``      — materialized arrays (per-leaf folded RNG),
+  * ``abstract_params``  — ShapeDtypeStructs (dry-run: zero allocation),
+  * ``make_shardings``   — NamedShardings via logical→mesh rules, skipping
+                            axes that do not divide evenly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclass(frozen=True)
+class P:
+    shape: tuple
+    axes: tuple                     # logical axis names (len == len(shape))
+    init: str = "normal"            # normal | zeros | ones
+    scale: float = 1.0              # stddev for normal init
+    dtype: str = ""                 # "" -> model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def init_params(tree, key, default_dtype: str = "float32"):
+    """Materialize arrays; each leaf gets a key folded from its path hash."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]
+
+    def one(path, spec):
+        dt = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        k = jax.random.fold_in(key, abs(hash(jax.tree_util.keystr(path)))
+                               % (2**31))
+        return (jax.random.normal(k, spec.shape, jnp.float32)
+                * spec.scale).astype(dt)
+
+    flat = {jax.tree_util.keystr(p): one(p, s) for p, s in leaves}
+    treedef = jax.tree_util.tree_structure(tree, is_leaf=is_spec)
+    return jax.tree_util.tree_unflatten(
+        treedef, [flat[jax.tree_util.keystr(p)] for p, _ in leaves])
+
+
+def abstract_params(tree, default_dtype: str = "float32"):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape,
+                                       jnp.dtype(s.dtype or default_dtype)),
+        tree)
+
+
+def num_params(tree) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+def spec_to_pspec(spec: P, mesh: Mesh, rules: dict) -> PartitionSpec:
+    """Logical axes -> PartitionSpec, skipping non-divisible shardings and
+    double-use of a mesh axis within one leaf. A rule value may be a LIST
+    of candidates — the first that divides evenly and is unused wins
+    (e.g. kv_seq: ["data", "model"] keeps decode KV caches resident when
+    the batch already took the data axis)."""
+    used = set()
+    out = []
+    for dim, ax in zip(spec.shape, spec.axes):
+        rule = rules.get(ax)
+        candidates = rule if isinstance(rule, list) else [rule]
+        chosen = None
+        for mesh_ax in candidates:
+            if mesh_ax is None:
+                continue
+            axes = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            size = int(np.prod([mesh.shape[m] for m in axes]))
+            if dim % size == 0 and not any(m in used for m in axes):
+                chosen = mesh_ax
+                used.update(axes)
+                break
+        out.append(chosen)
+    return PartitionSpec(*out)
+
+
+def make_shardings(tree, mesh: Mesh, rules: dict):
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, mesh, rules)), tree)
+
+
+def make_pspecs(tree, mesh: Mesh, rules: dict):
+    return tree_map_specs(lambda s: spec_to_pspec(s, mesh, rules), tree)

@@ -1,0 +1,173 @@
+"""State-space blocks: a shared chunked linear-recurrence helper + Mamba2.
+
+The recurrence  h_t = a_t * h_{t-1} + u_t w_t^T,   y_t = h_t q_t
+(with per-step scalar decay a_t and outer-product updates, state [dv, dk])
+covers both Mamba2's SSD (u = dt*x, w = B, q = C) and mLSTM's matrix memory
+(u = i*v, w = k, q = q). We evaluate it chunkwise — intra-chunk with dense
+matmuls (MXU-friendly) and a lax.scan carrying the state across chunks —
+which is the TPU-native adaptation of the CUDA "selective scan": instead of
+a warp-level sequential scan we restructure the work into [chunk x chunk]
+matmul tiles (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P
+
+
+def chunked_decay_scan(log_a, u, w, q, h0, chunk: int):
+    """Evaluate the recurrence above for all t.
+
+    log_a: [B,H,S] per-step log decay (<= 0)
+    u:     [B,H,S,dv]   w,q: [B,H,S,dk]   h0: [B,H,dv,dk]
+    Returns (y [B,H,S,dv], h_final [B,H,dv,dk]).
+    """
+    b, h, s = log_a.shape
+    dv, dk = u.shape[-1], w.shape[-1]
+    c = min(chunk, s)
+    s_orig = s
+    if s % c:                       # pad with identity steps (a=1, u=w=0)
+        pad = c - s % c
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    n = s // c
+
+    def to_chunks(x, extra):
+        return x.reshape((b, h, n, c) + extra).transpose(
+            (2, 0, 1, 3) + tuple(4 + i for i in range(len(extra))))
+
+    la = to_chunks(log_a, ())                       # [n,B,H,c]
+    uc = to_chunks(u, (dv,))
+    wc = to_chunks(w, (dk,))
+    qc = to_chunks(q, (dk,))
+
+    def body(hc, xs):
+        lai, ui, wi, qi = xs
+        cum = jnp.cumsum(lai, axis=-1)              # [B,H,c] inclusive
+        Ai = jnp.exp(cum)                           # decay from chunk start
+        # intra-chunk: M[t,s] = exp(cum_t - cum_s) for s<=t else 0
+        M = jnp.exp(cum[..., :, None] - cum[..., None, :])
+        M = jnp.where(jnp.tril(jnp.ones((c, c), bool)), M, 0.0)
+        qw = jnp.einsum("bhtk,bhsk->bhts", qi, wi).astype(jnp.float32)
+        y_intra = jnp.einsum("bhts,bhsv->bhtv", qw * M, ui.astype(jnp.float32))
+        y_inter = jnp.einsum("bhvk,bhtk->bhtv", hc,
+                             qi.astype(jnp.float32)) * Ai[..., None]
+        # state update: h' = A_c h + sum_s exp(cum_c - cum_s) u_s w_s^T
+        suffix = jnp.exp(cum[..., -1:] - cum)       # [B,H,c]
+        h_new = hc * jnp.exp(cum[..., -1])[..., None, None] + jnp.einsum(
+            "bhs,bhsv,bhsk->bhvk", suffix, ui.astype(jnp.float32),
+            wi.astype(jnp.float32))
+        return h_new, (y_intra + y_inter).astype(u.dtype)
+
+    h_fin, ys = jax.lax.scan(body, h0.astype(jnp.float32), (la, uc, wc, qc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dv)
+    return y[:, :, :s_orig], h_fin
+
+
+def decay_scan_step(log_a, u, w, q, h):
+    """Single-step (decode) version. log_a:[B,H] u:[B,H,dv] w,q:[B,H,dk]."""
+    h_new = h * jnp.exp(log_a)[..., None, None].astype(h.dtype) \
+        + jnp.einsum("bhv,bhk->bhvk", u, w).astype(h.dtype)
+    y = jnp.einsum("bhvk,bhk->bhv", h_new, q).astype(u.dtype)
+    return y, h_new
+
+
+# ----------------------------- Mamba2 block -----------------------------------
+CONV_K = 4   # depthwise causal conv width
+
+
+def mamba2_spec(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d                 # inner width
+    hd = cfg.ssm_head_dim
+    nh = di // hd                           # ssm heads
+    ds = cfg.ssm_state
+    s = d ** -0.5
+    return {
+        # in_proj -> [z (di), x (di), B (ds), C (ds), dt (nh)]
+        "in_proj": P((d, 2 * di + 2 * ds + nh), ("embed", "ssm_in"), scale=s),
+        "conv": P((CONV_K, di + 2 * ds), ("conv_k", "ssm_conv"), scale=0.3),
+        "A_log": P((nh,), ("ssm_heads",), init="zeros"),
+        "D": P((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": P((nh,), ("ssm_heads",), init="zeros"),
+        "norm": P((di,), ("ssm_inner",), init="ones"),
+        "out_proj": P((di, d), ("ssm_inner", "embed"), scale=di ** -0.5),
+    }
+
+
+def _mamba_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return di, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_cache_spec(cfg, batch: int) -> dict:
+    di, nh, hd, ds = _mamba_dims(cfg)
+    return {
+        "h": P((batch, nh, hd, ds),
+               ("batch", "ssm_heads", "ssm_hd", "ssm_state"), init="zeros"),
+        "conv": P((batch, CONV_K - 1, di + 2 * ds),
+                  ("batch", "conv_k", "ssm_conv"), init="zeros"),
+    }
+
+
+def _causal_conv(x, kernel, conv_state=None):
+    """Depthwise causal conv. x: [B,S,C], kernel: [K,C]."""
+    k = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+K-1, C]
+    out = sum(xp[:, i:i + x.shape[1], :] * kernel[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return out, new_state
+
+
+def mamba2_block(cfg, p, x, cache=None):
+    """x: [B,S,d]. cache: {"h","conv"} or None. Returns (out, new_cache)."""
+    dt_ = x.dtype
+    di, nh, hd, ds = _mamba_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    z, xin, Bc, Cc, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv"].astype(dt_),
+        None if cache is None else cache["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + ds], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B,S,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [nh] (<0)
+    log_a = (dt * A).transpose(0, 2, 1)                        # [B,nh,S]
+    b, s, _ = x.shape
+    xh = xin.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)       # [B,nh,S,hd]
+    u = xh * dt.transpose(0, 2, 1)[..., None].astype(dt_)
+    w = jnp.broadcast_to(Bc[:, None], (b, nh, s, ds))
+    q = jnp.broadcast_to(Cc[:, None], (b, nh, s, ds))
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32) if cache is None \
+        else cache["h"].astype(jnp.float32)
+    if s == 1 and cache is not None:
+        y, h_fin = decay_scan_step(log_a[..., 0], u[..., 0, :],
+                                   w[..., 0, :], q[..., 0, :], h0)
+        y = y[:, :, None, :]
+    else:
+        y, h_fin = chunked_decay_scan(log_a, u, w, q, h0, cfg.ssm_chunk)
+    y = y + xh.astype(y.dtype) * p["D"].astype(y.dtype)[None, :, None, None]
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, di)
+    # gated RMSNorm (Mamba2) then out-projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    new_cache = None if cache is None else {"h": h_fin.astype(cache["h"].dtype),
+                                            "conv": conv_state.astype(cache["conv"].dtype)}
+    return out, new_cache

@@ -1,0 +1,275 @@
+"""CausalLM: assembles the assigned architectures from block slots.
+
+Layers are evaluated with ``lax.scan`` over stacked per-layer params
+(grouped into super-blocks of ``cfg.layer_period`` slots for alternating
+structures: gemma2 local/global pairs, xLSTM mLSTM/sLSTM pairs, zamba2
+groups of N mamba layers + one *shared-weight* attention block).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.sharding import constrain, current_mesh
+from .attention import attention_block, attn_spec, padded_heads
+from .layers import (P, embed, embed_spec, mlp, mlp_psum_bf16, mlp_spec,
+                     rmsnorm, rmsnorm_spec, softcap, unembed)
+from .moe import moe_block, moe_spec
+from .ssm import mamba2_block, mamba2_cache_spec, mamba2_spec
+from .xlstm import (mlstm_block, mlstm_cache_spec, mlstm_spec, slstm_block,
+                    slstm_cache_spec, slstm_spec)
+
+
+# ----------------------------- slot layout -----------------------------------
+def block_slots(cfg) -> list:
+    if cfg.family == "hybrid" and cfg.attn_every:
+        return ["mamba"] * cfg.attn_every          # + shared attn per group
+    if cfg.xlstm:
+        return ["mlstm", "slstm"]
+    if cfg.family == "moe":
+        return ["attn_moe"] * max(1, len(cfg.attn_types))
+    return [f"attn:{t}" for t in cfg.attn_types]
+
+
+def n_super(cfg) -> int:
+    period = len(block_slots(cfg))
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+    return cfg.num_layers // period
+
+
+def _slot_spec(cfg, slot: str) -> dict:
+    d = cfg.d_model
+    if slot == "mamba":
+        return {"ln": rmsnorm_spec(d), "mamba": mamba2_spec(cfg)}
+    if slot == "mlstm":
+        return {"ln": rmsnorm_spec(d), "cell": mlstm_spec(cfg)}
+    if slot == "slstm":
+        return {"ln": rmsnorm_spec(d), "cell": slstm_spec(cfg)}
+    if slot == "attn_moe":
+        spec = {"ln": rmsnorm_spec(d), "attn": attn_spec(cfg),
+                "ln2": rmsnorm_spec(d), "moe": moe_spec(cfg)}
+        if cfg.moe_dense_ff:
+            spec["mlp"] = mlp_spec(d, cfg.moe_dense_ff)
+        return spec
+    assert slot.startswith("attn:"), slot
+    return {"ln": rmsnorm_spec(d), "attn": attn_spec(cfg),
+            "ln2": rmsnorm_spec(d), "mlp": mlp_spec(d, cfg.d_ff)}
+
+
+def _slot_cache_spec(cfg, slot: str, batch: int, max_len: int):
+    kv, hd = padded_heads(cfg)[1], cfg.resolved_head_dim
+    if slot.startswith("attn"):
+        if cfg.kv_layout == "paged":  # page pool + page table (gather)
+            pt = cfg.kv_page_tokens
+            n_pages = -(-max_len // pt)
+            pool = (batch * n_pages, pt, kv, hd)
+            pax = ("kv_pool", "kv_seq", "kv_heads", "head_dim")
+            return {"k_pool": P(pool, pax, init="zeros",
+                                dtype=cfg.compute_dtype),
+                    "v_pool": P(pool, pax, init="zeros",
+                                dtype=cfg.compute_dtype),
+                    "page_table": P((batch, n_pages), ("batch", None),
+                                    init="zeros", dtype="int32")}
+        if cfg.kv_layout == "ds":     # dim-major (decode-optimized) layout
+            shape = (batch, kv, hd, max_len)
+            axes = ("batch", "kv_heads", "head_dim", "kv_seq")
+        else:
+            shape = (batch, max_len, kv, hd)
+            axes = ("batch", "kv_seq", "kv_heads", "head_dim")
+        return {"k": P(shape, axes, init="zeros", dtype=cfg.compute_dtype),
+                "v": P(shape, axes, init="zeros", dtype=cfg.compute_dtype)}
+    if slot == "mamba":
+        return mamba2_cache_spec(cfg, batch)
+    if slot == "mlstm":
+        return mlstm_cache_spec(cfg, batch)
+    if slot == "slstm":
+        return slstm_cache_spec(cfg, batch)
+    raise ValueError(slot)
+
+
+def _apply_slot(cfg, slot, p, x, positions, cache, mesh):
+    if slot == "mamba":
+        y, nc = mamba2_block(cfg, p["mamba"], rmsnorm(p["ln"], x,
+                                                      cfg.norm_eps), cache)
+        return x + y, nc
+    if slot == "mlstm":
+        y, nc = mlstm_block(cfg, p["cell"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                            cache)
+        return x + y, nc
+    if slot == "slstm":
+        y, nc = slstm_block(cfg, p["cell"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                            cache)
+        return x + y, nc
+    window = cfg.window if slot == "attn:local" else 0
+    h_in = rmsnorm(p["ln"], x, cfg.norm_eps)
+    if cfg.seq_shard_attn and cache is None:
+        # sequence-parallel attention: shard S over the model axis so the
+        # qkv/o projections and scores stay balanced even when the head
+        # count does not divide the TP size (minicpm 36H, arctic 56H)
+        h_in = constrain(h_in, "batch", "seq_model", None)
+    y, nc = attention_block(cfg, p["attn"], h_in, positions,
+                            layer_window=window, cache=cache)
+    x = x + y
+    x = constrain(x, "batch", None, None)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if slot == "attn_moe":
+        fuse = (cfg.fuse_moe_dense_ar and cfg.moe_dense_ff
+                and mesh is not None and "model" in mesh.shape)
+        y2 = moe_block(cfg, p["moe"], h, mesh=mesh,
+                       data_axes=("pod", "data"),
+                       dense_mlp=p["mlp"] if fuse else None)
+        if cfg.moe_dense_ff and not fuse:
+            y2 = y2 + mlp(p["mlp"], h, x.dtype)
+    elif cfg.mlp_psum_bf16 and mesh is not None and "model" in mesh.shape:
+        y2 = mlp_psum_bf16(p["mlp"], h, x.dtype, mesh)
+    else:
+        y2 = mlp(p["mlp"], h, x.dtype)
+    return x + y2, nc
+
+
+# ----------------------------- the model --------------------------------------
+class CausalLM:
+    """Decoder-only LM (also hosts the VLM with a patch-embedding stub)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.slots = block_slots(cfg)
+        self.n_super = n_super(cfg)
+        self.shared_attn = cfg.family == "hybrid" and cfg.attn_every > 0
+
+    # -- specs ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+
+        def stack(tree):
+            return jax.tree.map(
+                lambda s: P((self.n_super,) + s.shape, ("layers",) + s.axes,
+                            init=s.init, scale=s.scale, dtype=s.dtype),
+                tree, is_leaf=lambda s: isinstance(s, P))
+
+        spec = {
+            "embed": embed_spec(cfg.padded_vocab, cfg.d_model),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+            "blocks": [stack(_slot_spec(cfg, s)) for s in self.slots],
+        }
+        if self.shared_attn:
+            spec["shared_attn"] = {"ln": rmsnorm_spec(cfg.d_model),
+                                   "attn": attn_spec(cfg),
+                                   "ln2": rmsnorm_spec(cfg.d_model),
+                                   "mlp": mlp_spec(cfg.d_model, cfg.d_ff)}
+        if cfg.frontend:
+            spec["frontend_proj"] = {
+                "w": P((cfg.d_model, cfg.d_model), ("embed", None),
+                       scale=cfg.d_model ** -0.5)}
+        return spec
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+
+        def stack(tree):
+            return jax.tree.map(
+                lambda s: P((self.n_super,) + s.shape, ("layers",) + s.axes,
+                            init=s.init, dtype=s.dtype),
+                tree, is_leaf=lambda s: isinstance(s, P))
+
+        cache = {"blocks": [stack(_slot_cache_spec(cfg, s, batch, max_len))
+                            for s in self.slots]}
+        if self.shared_attn:
+            cache["shared_attn"] = stack(
+                _slot_cache_spec(cfg, "attn:global", batch, max_len))
+        return cache
+
+    # -- forward ------------------------------------------------------------------
+    def _embed_inputs(self, params, tokens, frontend_embeds):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = embed(params["embed"], tokens, dt)
+        if cfg.frontend and frontend_embeds is not None:
+            fe = jnp.einsum("bfd,de->bfe", frontend_embeds.astype(dt),
+                            params["frontend_proj"]["w"].astype(dt))
+            x = jnp.concatenate([fe, x], axis=1)
+        return x
+
+    def _run_blocks(self, params, x, positions, cache):
+        cfg = self.cfg
+        mesh = current_mesh()
+        use_cache = cache is not None
+
+        def body(x, xs):
+            blocks_p, sh_cache, block_caches = xs
+            new_caches = []
+            for i, slot in enumerate(self.slots):
+                c = block_caches[i] if use_cache else None
+                x2, nc = _apply_slot(cfg, slot, blocks_p[i], x, positions, c,
+                                     mesh)
+                x = x2
+                new_caches.append(nc if use_cache else 0)
+            if self.shared_attn:
+                x2, nsh = _apply_slot(cfg, "attn:global",
+                                      params["shared_attn"], x, positions,
+                                      sh_cache if use_cache else None, mesh)
+                x = x2
+            else:
+                nsh = 0
+            return x, (nsh if use_cache else 0, tuple(new_caches))
+
+        if cfg.remat != "none":
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if cfg.remat == "full"
+                      else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            body = jax.checkpoint(body, policy=policy,
+                                  prevent_cse=False)
+        xs = (tuple(params["blocks"]),
+              cache.get("shared_attn") if use_cache else None,
+              tuple(cache["blocks"]) if use_cache else tuple(
+                  None for _ in self.slots))
+        # lax.scan needs uniform xs pytrees; in no-cache mode feed zeros
+        if not use_cache:
+            xs = (tuple(params["blocks"]),
+                  jnp.zeros((self.n_super,), jnp.int32),
+                  tuple(jnp.zeros((self.n_super,), jnp.int32)
+                        for _ in self.slots))
+        x, new_caches = jax.lax.scan(body, x, xs)
+        if use_cache:
+            sh, blocks = new_caches
+            out_cache = {"blocks": list(blocks)}
+            if self.shared_attn:
+                out_cache["shared_attn"] = sh
+            return x, out_cache
+        return x, None
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, x.dtype)
+        logits = constrain(logits, "batch", None, "vocab_logits")
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        if cfg.padded_vocab != cfg.vocab_size:   # mask vocab padding
+            logits = jnp.where(jnp.arange(cfg.padded_vocab)
+                               < cfg.vocab_size, logits, -1e30)
+        return logits
+
+    def apply(self, params, tokens, frontend_embeds=None):
+        """Teacher-forcing forward: tokens [B,S_text] -> logits [B,S,V]."""
+        x = self._embed_inputs(params, tokens, frontend_embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = constrain(x, "batch", None, None)
+        x, _ = self._run_blocks(params, x, positions, None)
+        return self._logits(params, x)
+
+    def prefill(self, params, tokens, cache, frontend_embeds=None):
+        x = self._embed_inputs(params, tokens, frontend_embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x, cache = self._run_blocks(params, x, positions, cache)
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, token, cache, pos):
+        """token: [B,1]; pos: scalar int32 position. One decode step."""
+        x = embed(params["embed"], token, jnp.dtype(self.cfg.compute_dtype))
+        positions = jnp.broadcast_to(pos, (x.shape[0], 1)).astype(jnp.int32)
+        x, cache = self._run_blocks(params, x, positions, cache)
+        return self._logits(params, x), cache

@@ -1,0 +1,148 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable — shares the chunked
+decayed-outer-product scan with Mamba2) and sLSTM (scalar memory with true
+hidden-to-hidden recurrence — evaluated with lax.scan; inherently
+sequential, as in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P
+from .ssm import chunked_decay_scan, decay_scan_step
+
+
+# ----------------------------- mLSTM -----------------------------------------
+def mlstm_spec(cfg) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    s = d ** -0.5
+    return {
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim"), scale=s),
+        "wk": P((d, h, hd), ("embed", "heads", "head_dim"), scale=s),
+        "wv": P((d, h, hd), ("embed", "heads", "head_dim"), scale=s),
+        "wi": P((d, h), ("embed", "heads"), scale=s * 0.1),
+        "wf": P((d, h), ("embed", "heads"), scale=s * 0.1),
+        "bf": P((h,), ("heads",), init="ones"),
+        "wo_gate": P((d, h, hd), ("embed", "heads", "head_dim"), scale=s),
+        "norm": P((h * hd,), ("ssm_inner",), init="ones"),
+        "wo": P((h * hd, d), ("ssm_inner", "embed"), scale=(h * hd) ** -0.5),
+    }
+
+
+def mlstm_cache_spec(cfg, batch: int) -> dict:
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {"C": P((batch, h, hd + 1, hd),
+                   ("batch", "heads", "ssm_hd", "ssm_state"), init="zeros")}
+
+
+def mlstm_block(cfg, p, x, cache=None):
+    """x: [B,S,d]. Matrix-memory LSTM: C' = f C + i v k^T ; y = C q / n.q.
+
+    The normalizer n is carried as an extra state row (dv+1 trick).
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt)) * hd ** -0.5
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(dt))
+    i_gate = jnp.exp(jnp.einsum("bsd,dh->bhs", x, p["wi"].astype(dt))
+                     .astype(jnp.float32).clip(-10, 10))
+    f_raw = jnp.einsum("bsd,dh->bhs", x, p["wf"].astype(dt)) \
+        .astype(jnp.float32) + p["bf"].astype(jnp.float32)[None, :, None]
+    log_f = jax.nn.log_sigmoid(f_raw)                       # decay in (0,1)
+    # stack v with ones so the same scan tracks the normalizer n
+    u = jnp.concatenate([v, jnp.ones_like(v[..., :1])], -1) \
+        * i_gate[..., None].astype(dt)                      # [B,H,S,hd+1]
+    h0 = jnp.zeros((b, h, hd + 1, hd), jnp.float32) if cache is None \
+        else cache["C"].astype(jnp.float32)
+    if s == 1 and cache is not None:
+        y, h_fin = decay_scan_step(log_f[..., 0], u[:, :, 0], k[:, :, 0],
+                                   q[:, :, 0], h0)
+        y = y[:, :, None, :]
+    else:
+        y, h_fin = chunked_decay_scan(log_f, u, k, q, h0, cfg.ssm_chunk)
+    num, den = y[..., :hd], y[..., hd:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bhsk", x, p["wo_gate"].astype(dt)))
+    y = (y.astype(dt) * o).transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bsz,zd->bsd", y, p["wo"].astype(dt))
+    new_cache = None if cache is None else \
+        {"C": h_fin.astype(cache["C"].dtype)}
+    return out, new_cache
+
+
+# ----------------------------- sLSTM -----------------------------------------
+def slstm_spec(cfg) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    s = d ** -0.5
+    return {
+        # input projections for gates z,i,f,o
+        "wx": P((d, 4, h, hd), ("embed", "gates", "heads", "head_dim"),
+                scale=s),
+        # block-diagonal (per-head) recurrent weights
+        "wr": P((h, hd, 4, hd), ("heads", "head_dim", "gates", "ssm_state"),
+                scale=hd ** -0.5),
+        "b": P((4, h, hd), ("gates", "heads", "head_dim"), init="zeros"),
+        "norm": P((h * hd,), ("ssm_inner",), init="ones"),
+        "wo": P((h * hd, d), ("ssm_inner", "embed"), scale=(h * hd) ** -0.5),
+    }
+
+
+def slstm_cache_spec(cfg, batch: int) -> dict:
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    ax = ("batch", "heads", "head_dim")
+    return {"c": P((batch, h, hd), ax, init="zeros"),
+            "n": P((batch, h, hd), ax, init="zeros"),
+            "h": P((batch, h, hd), ax, init="zeros"),
+            "m": P((batch, h, hd), ax, init="zeros")}
+
+
+def _slstm_step(p_wr, p_b, xg, state):
+    """One sLSTM step. xg: [B,4,H,hd] pre-computed input projections."""
+    c, n, hh, m = state
+    rec = jnp.einsum("bhk,hkgs->bghs", hh, p_wr)            # [B,4,H,hd]
+    g = xg.astype(jnp.float32) + rec.astype(jnp.float32) \
+        + p_b.astype(jnp.float32)[None]
+    z, i_raw, f_raw, o_raw = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_raw)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)                   # stabilizer
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * (c_new / jnp.maximum(n_new, 1.0))
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(cfg, p, x, cache=None):
+    dt = x.dtype
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    xg = jnp.einsum("bsd,dghk->bsghk", x, p["wx"].astype(dt))
+    if cache is None:
+        zeros = jnp.zeros((b, h, hd), jnp.float32)
+        state = (zeros, zeros, zeros, zeros)   # m=0 matches the cache init
+    else:
+        state = tuple(cache[k].astype(jnp.float32)
+                      for k in ("c", "n", "h", "m"))
+
+    def body(st, xg_t):
+        st2 = _slstm_step(p["wr"], p["b"], xg_t, st)
+        return st2, st2[2]
+
+    state, hs = jax.lax.scan(body, state, xg.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, h * hd).astype(dt)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bsz,zd->bsd", y, p["wo"].astype(dt))
+    new_cache = None if cache is None else dict(zip(
+        ("c", "n", "h", "m"), (st.astype(cache["c"].dtype)
+                               for st in state)))
+    return out, new_cache

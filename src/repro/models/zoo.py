@@ -1,0 +1,11 @@
+"""Model zoo: build any assigned architecture from its config."""
+from __future__ import annotations
+
+from .encdec import EncDecLM
+from .transformer import CausalLM
+
+
+def build_model(cfg):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return CausalLM(cfg)

@@ -1,0 +1,110 @@
+"""Fault-tolerant checkpointing: async, atomic, keep-N, elastic restore.
+
+Layout: <dir>/step_<N>/ with one .npy per flattened leaf + manifest.json
+(tree structure, shapes, dtypes, mesh that wrote it). Writes go to a
+temp dir + atomic rename; a checkpoint without MANIFEST_DONE is ignored on
+restore (crash-safe). Restore reassembles full arrays and re-shards to the
+*current* mesh — elastic scaling = save on M devices, restore on N.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # -- save ------------------------------------------------------------------
+    def save(self, step: int, state) -> None:
+        # snapshot to host BEFORE the async write (device buffers may be
+        # donated by the next step)
+        leaves, treedef = _flatten(state)
+        host = [np.asarray(x) for x in leaves]
+        if self._thread is not None:
+            self._thread.join()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, treedef), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, treedef)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step, host_leaves, treedef) -> None:
+        tmp = self.dir / f".tmp_step_{step}_{os.getpid()}"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(),
+                    "treedef": str(treedef),
+                    "leaves": []}
+        for i, arr in enumerate(host_leaves):
+            np.save(tmp / f"leaf_{i}.npy", arr)
+            manifest["leaves"].append({"i": i, "shape": list(arr.shape),
+                                       "dtype": str(arr.dtype)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / "MANIFEST_DONE").write_text("ok")
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "MANIFEST_DONE").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like, step: int | None = None):
+        """Restore into the structure/shardings of ``state_like`` (arrays or
+        ShapeDtypeStructs with .sharding) — reshards to the current mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
+        d = self.dir / f"step_{step}"
+        leaves, treedef = _flatten(state_like)
+        out = []
+        for i, like in enumerate(leaves):
+            arr = np.load(d / f"leaf_{i}.npy")
+            assert tuple(arr.shape) == tuple(like.shape), \
+                (i, arr.shape, like.shape)
+            sharding = getattr(like, "sharding", None)
+            if sharding is not None and hasattr(sharding, "mesh"):
+                out.append(jax.device_put(arr.astype(like.dtype), sharding))
+            else:
+                out.append(jax.numpy.asarray(arr.astype(like.dtype)))
+        return jax.tree_util.tree_unflatten(treedef, out), step

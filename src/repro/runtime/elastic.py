@@ -1,0 +1,73 @@
+"""Elasticity + fault tolerance glue for the training driver.
+
+* ``StragglerMonitor`` — per-step wall-time EWMA; steps slower than
+  ``threshold x`` the EWMA are flagged; ``trip`` fires after N consecutive
+  flags (at which point the driver checkpoints and requests a restart —
+  SPMD programs cannot drop a single slow participant mid-step, so
+  checkpoint-restart-reshard *is* the straggler mitigation at scale).
+* ``Preemption`` — SIGTERM-aware flag so the loop exits via a clean
+  checkpoint on eviction notice.
+* ``run_elastic`` — the restart loop: restore-latest → train → on failure
+  restore and continue; the mesh may differ between attempts (elastic
+  re-scaling is exercised in tests/test_checkpoint.py by resharding to a
+  different device count).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0
+    patience: int = 5
+    _ewma: float = field(default=0.0)
+    _flags: int = 0
+    steps: int = 0
+
+    def observe(self, step_seconds: float) -> bool:
+        """Returns True when mitigation (checkpoint+restart) should fire."""
+        self.steps += 1
+        if self._ewma == 0.0:
+            self._ewma = step_seconds
+            return False
+        slow = step_seconds > self.threshold * self._ewma
+        self._flags = self._flags + 1 if slow else 0
+        # slow steps do not poison the baseline
+        if not slow:
+            self._ewma = 0.9 * self._ewma + 0.1 * step_seconds
+        return self._flags >= self.patience
+
+
+class Preemption:
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.requested = False
+        for s in signals:
+            try:
+                signal.signal(s, self._handler)
+            except ValueError:           # non-main thread (tests)
+                pass
+
+    def _handler(self, *_):
+        self.requested = True
+
+
+def run_elastic(make_state, train_loop, checkpointer, *, max_restarts=3):
+    """Restart loop: each attempt restores the latest checkpoint (if any)
+    and runs ``train_loop(state, start_step)``; exceptions trigger a
+    restore+retry up to max_restarts."""
+    attempts = 0
+    while True:
+        state = make_state()
+        start = 0
+        if checkpointer.latest_step() is not None:
+            state, start = checkpointer.restore(state)
+        try:
+            return train_loop(state, start)
+        except Exception:
+            attempts += 1
+            if attempts > max_restarts:
+                raise
+            time.sleep(0.01)

@@ -1,0 +1,44 @@
+"""Serving steps: prefill (builds the KV cache) and decode (one token).
+
+``make_serve_step`` is what decode_* / long_* dry-run cells lower: one new
+token against a cache of ``seq_len``. Sampling is greedy argmax (the
+systems-relevant part is the memory/compute path, not the sampler).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model):
+    def prefill_step(params, cache, batch):
+        logits, cache = model.prefill(
+            params, batch["tokens"], cache,
+            frontend_embeds=batch.get("frontend_embeds"))
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, token, pos):
+        """token [B,1] int32, pos scalar int32 -> (next_token [B], cache)."""
+        logits, cache = model.decode_step(params, token, cache, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def greedy_generate(model, params, cache, prompt, steps: int):
+    """Host-side loop for examples/tests (jit per-step)."""
+    prefill = jax.jit(make_prefill_step(model))
+    step = jax.jit(make_serve_step(model))
+    tok, cache = prefill(params, cache, {"tokens": prompt})
+    out = [tok]
+    pos = prompt.shape[1]
+    for i in range(steps - 1):
+        tok, cache = step(params, cache, tok[:, None], jnp.int32(pos + i))
+        out.append(tok)
+    return jnp.stack(out, axis=1), cache

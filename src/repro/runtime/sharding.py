@@ -1,0 +1,78 @@
+"""Sharding rules: logical axes -> mesh axes, plus an activation-sharding
+context so model code can constrain the residual stream without threading
+mesh objects everywhere.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+# Logical parameter/cache axes -> mesh axes. ``make_shardings`` skips any
+# entry whose dimension does not divide evenly, so one table serves every
+# arch; within a leaf a mesh axis is never used twice (first dim wins).
+def param_rules(fsdp: bool = True, multi_pod: bool = False) -> dict:
+    fs = (("pod", "data") if multi_pod else ("data",)) if fsdp else None
+    return {
+        # tensor-parallel axes
+        "vocab": "model", "vocab_logits": "model",
+        "heads": "model", "kv_heads": "model",
+        "mlp": "model", "experts": "model", "ssm_heads": "model",
+        "ssm_inner": "model", "ssm_in": "model", "ssm_conv": "model",
+        # FSDP (ZeRO-3) axis
+        "embed": fs,
+        # replicated / stacked axes
+        "layers": None, "head_dim": None, "gates": None, "conv_k": None,
+        "experts_r": None, "ssm_state": None, "ssm_hd": None,
+        # data axes (caches / activations). kv_seq falls back to the model
+        # axis when the batch already occupies data — without this, narrow
+        # GQA caches (kv_heads < model size) would be model-replicated and
+        # blow the per-chip HBM budget at decode_32k.
+        "batch": ("pod", "data") if multi_pod else ("data",),
+        "kv_seq": ["data", "model"],
+        "kv_pool": ("pod", "data") if multi_pod else ("data",),
+        "frames": None,
+        # sequence-parallel attention (perf knob: head-indivisible archs)
+        "seq_model": "model",
+    }
+
+
+_ACT = {"mesh": None, "rules": None}
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, rules: dict):
+    old = dict(_ACT)
+    _ACT.update(mesh=mesh, rules=rules)
+    try:
+        yield
+    finally:
+        _ACT.update(old)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint if an activation context is active."""
+    mesh, rules = _ACT["mesh"], _ACT["rules"]
+    if mesh is None:
+        return x
+    spec, used = [], set()
+    for dim, ax in zip(x.shape, logical_axes):
+        m = rules.get(ax) if ax else None
+        if isinstance(m, str):
+            m = (m,)
+        if m and all(a not in used for a in m):
+            size = 1
+            for a in m:
+                size *= mesh.shape[a]
+            if dim % size == 0:
+                spec.append(tuple(m) if len(m) > 1 else m[0])
+                used.update(m)
+                continue
+        spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PS(*spec)))
+
+
+def current_mesh() -> Mesh | None:
+    return _ACT["mesh"]

@@ -1,0 +1,189 @@
+"""Training: loss, AdamW (+WSD schedule), grad clipping, microbatch
+accumulation, and mixed-precision policy.
+
+Mixed precision doubles as *gradient compression*: with
+``param_dtype=bfloat16`` the backward's cross-device grad reduce-scatter /
+all-reduce moves half the bytes; an fp32 master copy lives in the optimizer
+state (unless ``optstate_dtype=bfloat16``, as for arctic-480b where fp32
+states cannot fit one pod). An error-feedback buffer keeps bf16 grad
+accumulation unbiased across microbatches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models.params import P
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    schedule: str = "wsd"            # wsd | cosine | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1          # WSD: last 10% decays
+    final_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1            # gradient accumulation steps
+
+
+def schedule_lr(tcfg: TrainConfig, step):
+    s = step.astype(jnp.float32)
+    peak = tcfg.learning_rate
+    warm = peak * (s + 1) / max(tcfg.warmup_steps, 1)
+    if tcfg.schedule == "constant":
+        return jnp.minimum(warm, peak)
+    total = float(tcfg.total_steps)
+    if tcfg.schedule == "cosine":
+        frac = jnp.clip((s - tcfg.warmup_steps)
+                        / max(total - tcfg.warmup_steps, 1), 0, 1)
+        lr = peak * (tcfg.final_lr_frac + (1 - tcfg.final_lr_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.minimum(warm, lr)
+    # WSD (minicpm): warmup -> stable -> decay over the last decay_frac
+    decay_start = total * (1.0 - tcfg.decay_frac)
+    frac = jnp.clip((s - decay_start) / max(total - decay_start, 1), 0, 1)
+    lr = peak * (1.0 - (1.0 - tcfg.final_lr_frac) * frac)
+    return jnp.minimum(warm, lr)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits [B,S,V] (fp32), labels [B,S] int32. Returns (loss, n_tok)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / n, n
+
+
+# ----------------------------- optimizer -------------------------------------
+def opt_state_specs(param_specs_tree, cfg) -> dict:
+    """AdamW state specs mirroring the param tree (same logical axes)."""
+    def like(s, init="zeros", dtype=None):
+        return P(s.shape, s.axes, init=init, dtype=dtype or cfg.optstate_dtype)
+
+    is_p = lambda x: isinstance(x, P)
+    state = {
+        "m": jax.tree.map(partial(like), param_specs_tree, is_leaf=is_p),
+        "v": jax.tree.map(partial(like), param_specs_tree, is_leaf=is_p),
+        "step": P((), (), init="zeros", dtype="int32"),
+    }
+    if cfg.param_dtype != "float32" and cfg.optstate_dtype == "float32":
+        state["master"] = jax.tree.map(
+            lambda s: P(s.shape, s.axes, init=s.init, scale=s.scale,
+                        dtype="float32"),
+            param_specs_tree, is_leaf=is_p)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt, tcfg: TrainConfig):
+    step = opt["step"] + 1
+    lr = schedule_lr(tcfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = tcfg.b1, tcfg.b2
+    master = opt.get("master", params)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p_master, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        upd_ = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + tcfg.eps)
+        p32 = p_master.astype(jnp.float32)
+        p_new = p32 - lr * (upd_ + tcfg.weight_decay * p32)
+        return p_new, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, master, grads, opt["m"], opt["v"])
+    new_master = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_opt = {"m": new_m, "v": new_v, "step": step}
+    if "master" in opt:
+        new_opt["master"] = new_master
+        new_params = jax.tree.map(
+            lambda pm, p: pm.astype(p.dtype), new_master, params)
+    else:
+        new_params = jax.tree.map(
+            lambda pm, p: pm.astype(p.dtype), new_master, params)
+    return new_params, new_opt, {"lr": lr, "grad_norm": gnorm}
+
+
+# ----------------------------- train step ------------------------------------
+def make_train_step(model, tcfg: TrainConfig):
+    """Returns train_step(params, opt, batch) -> (params, opt, metrics).
+
+    batch: {"tokens": [B,S], "labels": [B,S], "mask": [B,S]}
+           (+ "frontend_embeds": [B,F,d] for vlm/audio archs).
+    With microbatches > 1, the batch's leading dim is split and grads are
+    accumulated in an error-feedback bf16 buffer.
+    """
+    cfg = model.cfg
+
+    def loss_fn(params, mb):
+        logits = model.apply(params, mb["tokens"],
+                             frontend_embeds=mb.get("frontend_embeds"))
+        labels, mask = mb["labels"], mb.get("mask")
+        loss, n = cross_entropy(logits, labels, mask)
+        return loss, n
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt, batch):
+        a = tcfg.microbatches
+        if a == 1:
+            (loss, _), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((a, x.shape[0] // a) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                gacc, err, loss_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                # error-feedback bf16 accumulation (grad "compression")
+                g = jax.tree.map(lambda e, gi: gi.astype(jnp.float32) + e,
+                                 err, g)
+                gacc2 = jax.tree.map(
+                    lambda acc, gi: (acc.astype(jnp.float32)
+                                     + gi).astype(acc.dtype), gacc, g)
+                err2 = jax.tree.map(
+                    lambda acc2, acc, gi: (acc.astype(jnp.float32) + gi)
+                    - acc2.astype(jnp.float32), gacc2, gacc, g)
+                return (gacc2, err2, loss_acc + loss), None
+
+            zeros_bf16 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            zeros_f32 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gacc, _, loss_sum), _ = jax.lax.scan(
+                acc_body, (zeros_bf16, zeros_f32, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / a, gacc)
+            loss = loss_sum / a
+        params, opt, om = adamw_update(params, grads, opt, tcfg)
+        metrics = {"loss": loss, **om}
+        return params, opt, metrics
+
+    return train_step

@@ -1,0 +1,66 @@
+"""Flash attention kernel (interpret mode) vs pure-jnp oracle: shape/dtype
+sweep incl. GQA, sliding window, softcap, and head-dim padding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref
+
+
+def rand_qkv(rng, b, s, h, kv, hd, dtype):
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), dtype)
+    return q, k, v
+
+
+def expand(x, rep):
+    return jnp.repeat(x, rep, axis=2) if rep > 1 else x
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,dtype", [
+    (1, 128, 2, 2, 64, jnp.float32),
+    (2, 256, 4, 2, 128, jnp.float32),
+    (1, 256, 4, 1, 128, jnp.bfloat16),
+    (1, 128, 2, 2, 80, jnp.float32),       # zamba2's hd=80 -> padded to 128
+])
+def test_flash_matches_ref(b, s, h, kv, hd, dtype):
+    rng = np.random.default_rng(s + hd)
+    q, k, v = rand_qkv(rng, b, s, h, kv, hd, dtype)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, expand(k, h // kv), expand(v, h // kv),
+                        causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window,softcap", [(64, 0.0), (0, 30.0),
+                                            (128, 50.0)])
+def test_flash_window_and_softcap(window, softcap):
+    rng = np.random.default_rng(window + int(softcap))
+    q, k, v = rand_qkv(rng, 1, 256, 2, 2, 64, jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          softcap=softcap, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window,
+                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_attention_path():
+    """Kernel == the model's XLA chunked-attention implementation."""
+    from repro.configs import get_config, reduced
+    from repro.models.attention import chunked_attention
+    cfg = reduced(get_config("yi-6b")).with_(attn_chunk_q=64, attn_chunk_kv=64)
+    rng = np.random.default_rng(0)
+    q, k, v = rand_qkv(rng, 2, 128, 4, 4, 16, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
+    ref = chunked_attention(cfg, q, k, v, pos, pos)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,39 @@
+"""Bloom kernels vs oracle: no false negatives, bounded false positives,
+kernel == ref across shapes/hash counts."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bloom.bloom import build_filter, probe_filter
+from repro.kernels.bloom.ops import bloom_build, bloom_probe, slots_for
+from repro.kernels.bloom.ref import build_ref, probe_ref
+
+
+@pytest.mark.parametrize("n,k_hashes", [(256, 7), (512, 4), (1024, 7)])
+def test_kernel_matches_ref(n, k_hashes):
+    rng = np.random.default_rng(n + k_hashes)
+    keys = rng.choice(2**30, size=n, replace=False).astype(np.int32)
+    n_slots = slots_for(n)
+    f_k = build_filter(jnp.asarray(keys), n_slots=n_slots,
+                       k_hashes=k_hashes, interpret=True)
+    f_r = build_ref(jnp.asarray(keys), n_slots, k_hashes)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+    probes = np.concatenate([keys[:128],
+                             rng.choice(2**30, 128).astype(np.int32)])
+    p_k = probe_filter(f_k, jnp.asarray(probes), k_hashes=k_hashes,
+                       interpret=True)
+    p_r = probe_ref(f_r, jnp.asarray(probes), k_hashes)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_no_false_negatives_and_fp_rate(use_kernel):
+    rng = np.random.default_rng(7)
+    keys = rng.choice(2**30, size=2000, replace=False).astype(np.int32)
+    filt = bloom_build(keys, use_kernel=use_kernel)
+    assert bloom_probe(filt, keys, use_kernel=use_kernel).all(), \
+        "bloom filters must never produce false negatives"
+    absent = rng.choice(2**30, size=4000).astype(np.int32)
+    absent = np.setdiff1d(absent, keys)
+    fp = bloom_probe(filt, absent, use_kernel=use_kernel).mean()
+    assert fp < 0.05, f"false-positive rate too high: {fp}"

@@ -1,0 +1,84 @@
+"""Per-architecture smoke tests: reduced config, one forward (+ decode) on
+CPU, asserting output shapes and no NaNs. The FULL configs are exercised
+only by the dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config, reduced
+from repro.models import abstract_params, build_model, init_params
+from repro.models.params import P
+
+ARCHS = all_archs()
+
+
+def make(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(0),
+                        cfg.param_dtype)
+    return cfg, model, params
+
+
+def inputs_for(cfg, batch=2, seq=32):
+    rng = np.random.default_rng(0)
+    f = cfg.frontend_tokens
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq - f
+                                                          if cfg.family != "encdec" else seq)))
+    fe = None
+    if cfg.frontend:
+        fe = jnp.asarray(rng.normal(size=(batch, f, cfg.d_model)),
+                         jnp.float32)
+    return tokens, fe
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, model, params = make(arch)
+    batch, seq = 2, 32
+    tokens, fe = inputs_for(cfg, batch, seq)
+    logits = model.apply(params, tokens, frontend_embeds=fe)
+    exp_seq = seq if cfg.family != "encdec" else seq
+    assert logits.shape == (batch, exp_seq, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_matches_apply(arch):
+    """Decode with a KV cache must agree with teacher-forcing logits."""
+    cfg, model, params = make(arch)
+    batch, seq = 2, 16
+    tokens, fe = inputs_for(cfg, batch, seq)
+    full = model.apply(params, tokens, frontend_embeds=fe)
+
+    cache = init_params(model.cache_specs(batch, max_len=32),
+                        jax.random.key(1), cfg.param_dtype)
+    t = tokens.shape[1]
+    logits_pre, cache = model.prefill(params, tokens[:, : t - 1], cache,
+                                      frontend_embeds=fe)
+    pos = full.shape[1] - 1  # position of the last token in the full stream
+    logits_dec, _ = model.decode_step(params, tokens[:, t - 1:t], cache,
+                                      jnp.int32(pos))
+    ref = full[:, -1, :]
+    got = logits_dec[:, -1, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_abstract_params_match_init(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    spec = model.param_specs()
+    ab = abstract_params(spec, cfg.param_dtype)
+    real = init_params(spec, jax.random.key(0), cfg.param_dtype)
+    jax.tree.map(lambda a, r: (a.shape == r.shape) or (_ for _ in ()).throw(
+        AssertionError((a.shape, r.shape))), ab, real)
+
+
+def test_full_configs_registered():
+    assert len(ARCHS) == 10
+    for a in ARCHS:
+        cfg = get_config(a)
+        assert cfg.num_layers >= 12

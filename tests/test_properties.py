@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsm.cost_model import optimal_allocation
+from repro.core.lsm.storage import LSMStore, StoreConfig
+from repro.core.tuner.tuner import TunerConfig, newton_step
+
+KB, MB = 1 << 10, 1 << 20
+
+
+def make_store(scheme, policy="opt", write_mem=2 * MB):
+    return LSMStore(StoreConfig(
+        total_memory_bytes=32 * MB, write_memory_bytes=write_mem,
+        sim_cache_bytes=1 * MB, page_bytes=4 * KB, entry_bytes=256,
+        active_sstable_bytes=128 * KB, sstable_bytes=256 * KB,
+        max_log_bytes=8 * MB, scheme=scheme, flush_policy=policy))
+
+
+@st.composite
+def workload(draw):
+    n_batches = draw(st.integers(5, 25))
+    batches = []
+    for _ in range(n_batches):
+        tree = draw(st.sampled_from(["a", "b"]))
+        seed = draw(st.integers(0, 2**31 - 1))
+        size = draw(st.integers(50, 800))
+        batches.append((tree, seed, size))
+    return batches
+
+
+@settings(max_examples=15, deadline=None)
+@given(workload(), st.sampled_from(["partitioned", "btree-dynamic",
+                                    "accordion-data"]),
+       st.sampled_from(["mem", "lsn", "opt"]))
+def test_reconciliation_and_invariants(batches, scheme, policy):
+    store = make_store(scheme, policy)
+    store.create_tree("a")
+    store.create_tree("b")
+    oracle = {"a": {}, "b": {}}
+    for tree, seed, size in batches:
+        rng = np.random.default_rng(seed)
+        ks = rng.integers(0, 50_000, size=size)
+        vs = rng.integers(0, 2**31, size=size)
+        store.write(tree, ks, vs)
+        for k, v in zip(ks.tolist(), vs.tolist()):
+            oracle[tree][k] = v
+    # 1) newest-wins reconciliation on a sample
+    rng = np.random.default_rng(0)
+    for tree, d in oracle.items():
+        if not d:
+            continue
+        sample = rng.choice(list(d.keys()), size=min(len(d), 100))
+        for k in sample.tolist():
+            found, val = store.lookup(tree, k)
+            assert found and val == d[k]
+    for t in store.trees.values():
+        # 2) disk levels: sorted + disjoint within each level
+        for lvl in t.levels.levels:
+            for s1, s2 in zip(lvl, lvl[1:]):
+                assert s1.max_key < s2.min_key
+        # 3) grouped L0: disjoint within each group
+        if hasattr(t.l0, "groups"):
+            for g in t.l0.groups:
+                for s1, s2 in zip(g, g[1:]):
+                    assert s1.max_key < s2.min_key
+        # 4) every SSTable's keys sorted unique
+        for s in (t.l0.all_tables()
+                  + [s for lvl in t.levels.levels for s in lvl]):
+            assert np.all(np.diff(s.keys) > 0)
+    # 5) log bounded; memory respected
+    assert store.log_length <= store.cfg.max_log_bytes
+    st_ = store.disk.stats
+    assert st_.pages_merge_written >= 0
+    assert store.write_memory_used() <= store.write_memory_bytes * 1.10 \
+        or st_.pages_flushed == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.0, 1e9), min_size=1, max_size=8))
+def test_optimal_allocation_sums_to_one(rates):
+    a = np.asarray(optimal_allocation(np.array(rates, np.float32)))
+    assert abs(float(a.sum()) - 1.0) < 1e-4
+    assert np.all(a >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(64.0, 1024.0), st.floats(-1e-6, 1e-6),
+       st.integers(0, 2**31 - 1))
+def test_newton_step_respects_clamps(x_mb, cp, seed):
+    """§5.4: either region shrinks by at most 10% of itself, bounds hold."""
+    cfg = TunerConfig(min_step_bytes=1 * MB, min_write_mem=16 * MB)
+    total, sim = 2048 * MB, 64 * MB
+    x = x_mb * MB
+    rng = np.random.default_rng(seed)
+    hx = [x * (1 + rng.uniform(-0.2, 0.2)) for _ in range(3)]
+    hc = [cp * (1 + rng.uniform(-0.5, 0.5)) for _ in range(3)]
+    x2 = newton_step(hx, hc, x, cp, total, sim, cfg)
+    cache = total - x - sim
+    assert x2 >= x - 0.10 * x - 1e-6            # write memory shrink cap
+    assert x2 <= x + 0.10 * max(cache, 0) + 1e-6  # cache shrink cap
+    assert cfg.min_write_mem - 1e-6 <= x2 \
+        <= total - sim - cfg.min_write_mem + 1e-6
+
+
+def synthetic_cost(x, total):
+    """A convex cost(x): write cost falls ~1/log-ish, read cost rises."""
+    return 2e9 / x + 3e9 / (total - x)
+
+
+def test_tuner_converges_on_synthetic_convex_cost():
+    """Gradient/Newton loop finds the analytic minimum of a convex cost."""
+    total, sim = 4096 * MB, 64 * MB
+    cfg = TunerConfig(min_step_bytes=4 * MB, min_write_mem=16 * MB,
+                      min_rel_gain=0.0)
+    x = 128.0 * MB
+    hx, hc = [], []
+    eps = 1.0
+    for _ in range(60):
+        cp = (synthetic_cost(x + eps, total)
+              - synthetic_cost(x - eps, total)) / (2 * eps)
+        hx.append(x)
+        hc.append(cp)
+        x = newton_step(hx[-3:], hc[-3:], x, cp, total, sim, cfg)
+    # analytic optimum of 2e9/x + 3e9/(T-x): x* = T/(1+sqrt(1.5))
+    x_opt = total / (1 + np.sqrt(1.5))
+    assert abs(x - x_opt) / x_opt < 0.05

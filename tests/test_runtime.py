@@ -1,0 +1,156 @@
+"""Runtime tests: checkpoint/restart determinism, crash safety, straggler
+monitor, paged KV pool policies, HBM tuner direction."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import build_model, init_params
+from repro.runtime.checkpoint import Checkpointer
+from repro.runtime.elastic import StragglerMonitor, run_elastic
+from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
+from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
+from repro.runtime.training import TrainConfig, make_train_step
+from repro.models.params import abstract_params
+from repro.runtime.training import opt_state_specs
+
+
+def tiny_setup():
+    cfg = reduced(get_config("minicpm-2b"))
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(0),
+                         cfg.param_dtype)
+    opt = init_params(opt_state_specs(model.param_specs(), cfg),
+                      jax.random.key(1), cfg.optstate_dtype)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=50)
+    step = jax.jit(make_train_step(model, tcfg))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=4))
+    return cfg, model, params, opt, step, data
+
+
+def run_steps(step, params, opt, data, steps, start=0):
+    loss = None
+    for i in range(start, start + steps):
+        params, opt, m = step(params, opt,
+                              jax.tree.map(jnp.asarray, data.batch(i)))
+        loss = float(m["loss"])
+    return params, opt, loss
+
+
+def test_train_checkpoint_restart_determinism(tmp_path):
+    _, _, params, opt, step, data = tiny_setup()
+    # straight run of 4 steps
+    p4, o4, _ = run_steps(step, params, opt, data, 4)
+    # run 2, checkpoint, "crash", restore, run 2 more
+    p2, o2, _ = run_steps(step, params, opt, data, 2)
+    ck = Checkpointer(tmp_path / "ckpt", keep=2, async_save=True)
+    ck.save(2, {"params": p2, "opt": o2})
+    ck.wait()
+    like = {"params": p2, "opt": o2}
+    restored, at = ck.restore(like)
+    assert at == 2
+    pr, orr, _ = run_steps(step, restored["params"], restored["opt"],
+                           data, 2, start=2)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-5,
+        atol=1e-6), p4, pr)
+
+
+def test_checkpoint_crash_safety_and_keep(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2, async_save=False)
+    state = {"w": jnp.arange(8.0)}
+    for s in (1, 2, 3):
+        ck.save(s, state)
+    assert ck.all_steps() == [2, 3]          # keep-N garbage collection
+    # a torn checkpoint (no MANIFEST_DONE) must be ignored
+    torn = Path(tmp_path) / "step_9"
+    torn.mkdir()
+    (torn / "manifest.json").write_text("{}")
+    assert ck.latest_step() == 3
+    restored, at = ck.restore(state)
+    assert at == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8.0))
+
+
+def test_run_elastic_restarts_after_failure(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    calls = {"n": 0}
+
+    def make_state():
+        return {"w": jnp.zeros(4)}
+
+    def train_loop(state, start):
+        calls["n"] += 1
+        for s in range(start, 6):
+            state = {"w": state["w"] + 1}
+            ck.save(s + 1, state)
+            ck.wait()
+            if calls["n"] == 1 and s == 2:
+                raise RuntimeError("simulated node failure")
+        return state
+
+    out = run_elastic(make_state, train_loop, ck)
+    assert calls["n"] == 2
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.full(4, 6.0))
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0, patience=3)
+    assert not any(mon.observe(1.0) for _ in range(10))
+    assert not mon.observe(5.0)
+    assert not mon.observe(5.0)
+    assert mon.observe(5.0)                  # third consecutive slow step
+
+
+# ----------------------------- KV pool ----------------------------------------
+def test_kv_pool_accounting_and_policies():
+    pool = PagedKVPool(KVPoolConfig(page_tokens=4, total_pages=64,
+                                    pool_pages=32, policy="opt"))
+    for i in range(10):
+        pool.append_tokens("hot", 16)        # 4 pages per call
+        if i % 5 == 0:
+            pool.append_tokens("cold", 4)
+    assert pool.pool_pages_used <= pool.cfg.pool_pages
+    hot, cold = pool.stream("hot"), pool.stream("cold")
+    assert hot.allocated > cold.allocated
+    # OPT keeps the hot stream's share near its allocation rate
+    assert len(hot.pages) >= len(cold.pages)
+    # finishing a stream frees its pages
+    used = pool.pool_pages_used
+    pool.finish_stream("hot")
+    assert pool.pool_pages_used < used
+
+
+def test_kv_pool_min_lsn_policy_evicts_oldest():
+    pool = PagedKVPool(KVPoolConfig(page_tokens=1, total_pages=16,
+                                    pool_pages=8, policy="lsn"))
+    pool.append_tokens("old", 4)
+    pool.append_tokens("new", 4)
+    pool.append_tokens("new", 4)             # forces flushes
+    assert pool.stream("old").offloaded >= 1
+    assert pool.stream("new").offloaded == 0
+
+
+def test_hbm_tuner_moves_toward_prefix_cache_under_reuse():
+    """Prefix-heavy workload: ghost hits make the tuner shrink the pool."""
+    pool = PagedKVPool(KVPoolConfig(page_tokens=4, total_pages=256,
+                                    pool_pages=192, sim_pages=64))
+    tuner = HBMTuner(pool, HBMTunerConfig(ops_cycle=64))
+    rng = np.random.default_rng(0)
+    x0 = pool.cfg.pool_pages
+    for step in range(2000):
+        # shared prompt chunks cycling through a working set > cache size
+        pool.lookup_prefix(int(rng.integers(0, 96)))
+        if step % 17 == 0:
+            pool.append_tokens("s", 4)
+        tuner.maybe_tune()
+    assert pool.cfg.pool_pages < x0, \
+        (pool.cfg.pool_pages, [r["x_next"] for r in tuner.records])

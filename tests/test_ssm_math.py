@@ -1,0 +1,73 @@
+"""The chunked decayed-outer-product scan (shared by Mamba2's SSD and
+mLSTM) must equal the naive step-by-step recurrence for any chunk size."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import chunked_decay_scan, decay_scan_step
+
+
+def naive_scan(log_a, u, w, q, h0):
+    b, h, s = log_a.shape
+    hcur = np.array(h0, np.float64)
+    ys = []
+    la, u_, w_, q_ = (np.array(x, np.float64) for x in (log_a, u, w, q))
+    for t in range(s):
+        a = np.exp(la[..., t])[..., None, None]
+        hcur = a * hcur + np.einsum("bhv,bhk->bhvk", u_[:, :, t], w_[:, :, t])
+        ys.append(np.einsum("bhvk,bhk->bhv", hcur, q_[:, :, t]))
+    return np.stack(ys, axis=2), hcur
+
+
+def rand_inputs(rng, b, h, s, dv, dk):
+    log_a = -np.abs(rng.normal(size=(b, h, s))).astype(np.float32) * 0.5
+    u = rng.normal(size=(b, h, s, dv)).astype(np.float32)
+    w = rng.normal(size=(b, h, s, dk)).astype(np.float32)
+    q = rng.normal(size=(b, h, s, dk)).astype(np.float32)
+    h0 = rng.normal(size=(b, h, dv, dk)).astype(np.float32)
+    return log_a, u, w, q, h0
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 4), (17, 4), (32, 32), (8, 16),
+                                     (64, 8)])
+def test_chunked_scan_matches_naive(s, chunk):
+    rng = np.random.default_rng(s * 31 + chunk)
+    args = rand_inputs(rng, 2, 3, s, 5, 4)
+    y, hf = chunked_decay_scan(*(jnp.asarray(a) for a in args), chunk)
+    y_ref, hf_ref = naive_scan(*args)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), hf_ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.sampled_from([2, 8, 64]),
+       st.integers(0, 2**31 - 1))
+def test_chunked_scan_chunk_size_invariance(s, chunk, seed):
+    """The result must not depend on the chunk size (pure re-bracketing)."""
+    rng = np.random.default_rng(seed)
+    args = [jnp.asarray(a) for a in rand_inputs(rng, 1, 2, s, 3, 3)]
+    y1, h1 = chunked_decay_scan(*args, 1)
+    y2, h2 = chunked_decay_scan(*args, chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_decode_step_continues_the_scan():
+    """Running the chunked scan over s-1 steps then one decode step equals
+    the full-s scan (prefill -> decode state handoff)."""
+    rng = np.random.default_rng(0)
+    args = rand_inputs(rng, 2, 2, 12, 4, 4)
+    log_a, u, w, q, h0 = (jnp.asarray(a) for a in args)
+    y_full, h_full = chunked_decay_scan(log_a, u, w, q, h0, 4)
+    y_pre, h_pre = chunked_decay_scan(log_a[..., :11], u[:, :, :11],
+                                      w[:, :, :11], q[:, :, :11], h0, 4)
+    y_last, h_last = decay_scan_step(log_a[..., 11], u[:, :, 11],
+                                     w[:, :, 11], q[:, :, 11], h_pre)
+    np.testing.assert_allclose(np.asarray(y_last),
+                               np.asarray(y_full[:, :, 11]), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h_full),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,101 @@
+"""Validate the tuner's derivative estimators against the paper's own
+worked examples (§5.2 Example 5.1, §5.3 Example 5.2)."""
+import numpy as np
+import pytest
+
+from repro.core.tuner.derivatives import (TunerStats, cost_derivative,
+                                          read_derivative, write_derivative)
+
+MiB = 1 << 20
+GiB = 1 << 30
+
+
+def example_51_stats():
+    """Two LSM-trees, x=128MB; tree1 a=0.8, |L_N|=100GB, merge=1 page/op;
+    tree2 a=0.2, |L_N|=50GB, merge=0.8 page/op; all memory-triggered."""
+    return TunerStats(
+        x=128 * MiB,
+        merge_pages_per_op=np.array([1.0, 0.8]),
+        last_level_bytes=np.array([100.0 * GiB, 50.0 * GiB]),
+        alloc=np.array([0.8, 0.2]),
+        flush_mem_bytes=np.array([1.0, 1.0]),
+        flush_log_bytes=np.array([0.0, 0.0]),
+        sim_bytes=32 * MiB,
+        saved_q_per_op=0.01,
+        saved_m_per_op=0.008,
+        read_m_per_op=2.4,
+        merge_per_op=1.8,
+    )
+
+
+def test_example_5_1_write_derivative():
+    s = example_51_stats()
+    wp = float(write_derivative(s.x, s.merge_pages_per_op,
+                                s.last_level_bytes, s.alloc,
+                                s.flush_mem_bytes, s.flush_log_bytes))
+    # paper: write'_1 ~ -1.08e-9, write'_2 ~ -0.78e-9, total ~ -1.86e-9
+    assert wp == pytest.approx(-1.86e-9, rel=0.02)
+
+
+def test_example_5_1_per_tree_terms():
+    s = example_51_stats()
+    w1 = float(write_derivative(s.x, s.merge_pages_per_op[:1],
+                                s.last_level_bytes[:1], s.alloc[:1],
+                                s.flush_mem_bytes[:1], s.flush_log_bytes[:1]))
+    w2 = float(write_derivative(s.x, s.merge_pages_per_op[1:],
+                                s.last_level_bytes[1:], s.alloc[1:],
+                                s.flush_mem_bytes[1:], s.flush_log_bytes[1:]))
+    assert w1 == pytest.approx(-1.08e-9, rel=0.02)
+    assert w2 == pytest.approx(-0.78e-9, rel=0.03)
+
+
+def test_example_5_2_read_derivative():
+    s = example_51_stats()
+    wp = float(write_derivative(s.x, s.merge_pages_per_op,
+                                s.last_level_bytes, s.alloc,
+                                s.flush_mem_bytes, s.flush_log_bytes))
+    rp = float(read_derivative(wp, s.saved_q_per_op, s.saved_m_per_op,
+                               s.sim_bytes, s.read_m_per_op, s.merge_per_op))
+    assert rp == pytest.approx(-1.94e-9, rel=0.02)
+
+
+def test_cost_derivative_weights():
+    s = example_51_stats()
+    cp, wp, rp = cost_derivative(s, omega=1.0, gamma=1.0)
+    assert cp == pytest.approx(wp + rp, rel=1e-6)
+    cp2, _, _ = cost_derivative(s, omega=2.0, gamma=1.0)
+    assert cp2 == pytest.approx(2 * wp + rp, rel=1e-6)
+
+
+def test_log_triggered_flushes_zero_the_write_derivative():
+    """§5.2: the scale factor kills write'(x) when flushes are log-bound."""
+    s = example_51_stats()
+    wp_mem = float(write_derivative(s.x, s.merge_pages_per_op,
+                                    s.last_level_bytes, s.alloc,
+                                    np.array([1.0, 1.0]),
+                                    np.array([0.0, 0.0])))
+    wp_log = float(write_derivative(s.x, s.merge_pages_per_op,
+                                    s.last_level_bytes, s.alloc,
+                                    np.array([0.0, 0.0]),
+                                    np.array([1.0, 1.0])))
+    wp_half = float(write_derivative(s.x, s.merge_pages_per_op,
+                                     s.last_level_bytes, s.alloc,
+                                     np.array([1.0, 1.0]),
+                                     np.array([1.0, 1.0])))
+    assert wp_log == 0.0
+    assert wp_half == pytest.approx(wp_mem / 2, rel=1e-5)
+    assert wp_mem < wp_half < wp_log
+
+
+def test_write_derivative_negative_and_decreasing_in_x():
+    """More write memory always helps (Eq. 4 is negative), with diminishing
+    returns (|write'| decreases as x grows)."""
+    s = example_51_stats()
+    grads = []
+    for x in [64 * MiB, 128 * MiB, 256 * MiB, 1 * GiB]:
+        g = float(write_derivative(x, s.merge_pages_per_op,
+                                   s.last_level_bytes, s.alloc,
+                                   s.flush_mem_bytes, s.flush_log_bytes))
+        assert g < 0
+        grads.append(g)
+    assert all(grads[i] < grads[i + 1] for i in range(len(grads) - 1))
