@@ -88,8 +88,9 @@ class Workload:
                     self.store.scan(tree, int(lo), self.scan_len)
                 self.store.note_ops(0)
             else:
-                for k in self._keys(b):
-                    self.store.lookup(tree, int(k))
+                # batched end-to-end: one lookup_batch per op batch (Bloom
+                # probes issued as one backend call per SSTable per batch)
+                self.store.read_batch(tree, self._keys(b))
             done += b
             if on_batch is not None:
                 on_batch(self.store)

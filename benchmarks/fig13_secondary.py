@@ -38,9 +38,8 @@ def one(scheme, policy, write_mem_mb=2, skew=(0.8, 0.2), fields_per_write=1,
         while done < n_ops:
             b = 128
             keys = w._keys(b)
-            # index cleanup: primary lookup per write
-            for k in keys[:16]:
-                store.lookup("primary", int(k), op=False)
+            # index cleanup: primary lookups per write, one batched probe
+            store.read_batch("primary", keys[:16], op=False)
             store.write("primary", keys, keys, op=False)
             for f in rng.choice(N_SEC, fields_per_write, replace=False,
                                 p=fp):

@@ -38,8 +38,7 @@ class TPCC:
         return self.rng.integers(0, self.rows[table], n)
 
     def _read(self, table, n=1):
-        for k in self._k(table, n):
-            self.store.lookup(table, int(k), op=False)
+        self.store.read_batch(table, self._k(table, n), op=False)
 
     def _write(self, table, n=1, fresh=False):
         if fresh:

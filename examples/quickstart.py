@@ -35,11 +35,13 @@ for step in range(400):
     tree = "hot" if step % 10 else "cold"
     keys = rng.integers(0, 200_000, size=256)
     store.write(tree, keys, keys)
-    for k in keys[:32]:
-        store.lookup(tree, int(k))
+    found, vals = store.read_batch(tree, keys[:32])  # batched point reads
+    assert found.all() and (vals == keys[:32]).all()
     ctrl.maybe_tune()
 
 st = store.disk.stats
+print(f"execution backend: {store.backend.name} "
+      f"(select with StoreConfig.backend or REPRO_LSM_BACKEND)")
 print(f"write memory (tuned): {store.write_memory_bytes / MB:.1f} MB")
 print(f"hot tree memory:  {hot.mem_bytes / KB:8.0f} KB  "
       f"(write-rate-proportional share)")

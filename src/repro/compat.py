@@ -1,0 +1,19 @@
+"""Version-compat shims for jax APIs used across the codebase.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (where the
+replication check is named ``check_rep``) to ``jax.shard_map`` (renamed to
+``check_vma``); this wrapper accepts the modern signature on either
+version.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -1,6 +1,7 @@
 # The paper's primary contribution: adaptive memory management for
 # LSM-based storage (partitioned memory components, flush policies, and the
 # write-memory/buffer-cache memory tuner).
+from .engine import ExecutionBackend, get_backend  # noqa: F401
 from .lsm.storage import LSMStore, StoreConfig, TimeModel  # noqa: F401
 from .lsm.tree import LSMTree  # noqa: F401
 from .tuner.derivatives import TunerStats, cost_derivative  # noqa: F401

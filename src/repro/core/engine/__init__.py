@@ -1,0 +1,16 @@
+"""Pluggable execution backends for the LSM engine's hot loops.
+
+``get_backend("numpy")`` is the reference; ``get_backend("pallas")`` runs
+compaction merges, Bloom build/probe, and batched lookups through the
+Pallas TPU kernels (interpret mode on CPU). The ``REPRO_LSM_BACKEND``
+environment variable sets the backend for every store that does not pin
+one explicitly.
+
+Importing this package stays jax-free: the pallas backend module defers
+its jax/kernel imports until first instantiation.
+"""
+from .backend import (ENV_VAR, ExecutionBackend,  # noqa: F401
+                      available_backends, bloom_sizing, get_backend,
+                      next_pow2, register_backend)
+from .numpy_backend import NumpyBackend, merge_runs_numpy  # noqa: F401
+from .pallas_backend import PallasBackend  # noqa: F401

@@ -1,0 +1,102 @@
+"""Execution-backend interface for the LSM engine's hot loops.
+
+A backend supplies the engine's four data-parallel primitives:
+
+  * ``merge_runs(runs)``     -- k-way newest-wins merge (compaction)
+  * ``bloom_build(keys)``    -- per-SSTable Bloom filter construction
+  * ``bloom_probe(f, keys)`` -- batched membership probes
+  * ``lookup_batch(sorted_keys, queries)`` -- batched binary search in a run
+
+``NumpyBackend`` carries the reference semantics; ``PallasBackend`` routes
+the same primitives through the Pallas TPU kernels (interpret mode on CPU,
+compiled on TPU). Both backends use the *same* Bloom geometry (hash family,
+slot count, size bucketing) so their probe results -- including false
+positives -- are bit-identical, which the parity suite relies on.
+
+Selection: ``get_backend(name)`` resolves, in order, the explicit
+``name`` (``StoreConfig.backend``), the ``REPRO_LSM_BACKEND``
+environment variable, then the ``"numpy"`` default — so the env var
+flips every store that does not pin a backend (e.g. the stock
+benchmarks) without silently overriding code that chose one.
+"""
+from __future__ import annotations
+
+import os
+
+from ...kernels.sizing import next_pow2, slots_for  # jax-free module
+
+ENV_VAR = "REPRO_LSM_BACKEND"
+
+# Shared Bloom geometry (matches kernels/bloom: 10 bits/key, 7 hashes).
+BLOOM_BITS_PER_KEY = 10
+BLOOM_K_HASHES = 7
+
+
+def bloom_sizing(n_keys: int, bits_per_key: int = BLOOM_BITS_PER_KEY):
+    """(padded_key_count, n_slots) for a filter over ``n_keys`` keys.
+
+    Both backends size filters from the *bucketed* key count so a filter
+    built by one backend has the same geometry (and false-positive set) as
+    one built by the other.
+    """
+    n_pad = next_pow2(max(1, n_keys), lo=256)
+    return n_pad, slots_for(n_pad, bits_per_key)
+
+
+class ExecutionBackend:
+    """Interface of the engine's batched primitives."""
+
+    name: str = "abstract"
+
+    def merge_runs(self, runs):
+        """Merge sorted (keys, vals) runs, ordered newest-first, into one
+        sorted unique run with newest-wins reconciliation.
+
+        Returns (keys, vals) as int64 numpy arrays.
+        """
+        raise NotImplementedError
+
+    def bloom_build(self, keys):
+        """Build a Bloom filter over ``keys``; returns an opaque filter."""
+        raise NotImplementedError
+
+    def bloom_probe(self, filt, keys):
+        """Probe ``filt`` for ``keys``; returns a bool membership mask
+        (no false negatives)."""
+        raise NotImplementedError
+
+    def lookup_batch(self, sorted_keys, queries):
+        """Batched binary search of ``queries`` in a sorted unique run.
+
+        Returns (pos, found): the insertion position of each query (int64)
+        and whether ``sorted_keys[pos] == query`` (bool).
+        """
+        raise NotImplementedError
+
+
+_FACTORIES: dict = {}
+_INSTANCES: dict = {}
+
+
+def register_backend(name: str, factory) -> None:
+    _FACTORIES[name] = factory
+
+
+def available_backends() -> tuple:
+    """Registered backend names (the registry is the source of truth)."""
+    return tuple(sorted(_FACTORIES))
+
+
+def get_backend(name: str | None = None) -> ExecutionBackend:
+    """Resolve a backend by name: explicit name > env var > "numpy".
+
+    Instances are cached (backends are stateless apart from jit caches).
+    """
+    resolved = name or os.environ.get(ENV_VAR) or "numpy"
+    if resolved not in _FACTORIES:
+        raise ValueError(
+            f"unknown LSM backend {resolved!r}; expected one of "
+            f"{sorted(_FACTORIES)}")
+    if resolved not in _INSTANCES:
+        _INSTANCES[resolved] = _FACTORIES[resolved]()
+    return _INSTANCES[resolved]

@@ -1,0 +1,86 @@
+"""Reference execution backend: pure numpy, no jax imports.
+
+Carries the engine's original semantics (the k-way merge extracted from
+``sstable.merge_runs``) plus a real double-hashed Bloom filter whose hash
+math mirrors ``kernels/bloom/ref.py`` exactly (same Knuth multipliers, same
+int32 wraparound, same slot layout) so probe results match the Pallas
+backend bit-for-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .backend import (BLOOM_K_HASHES, ExecutionBackend, bloom_sizing,
+                      register_backend)
+
+# Same int32 constants as kernels/bloom/ref.py (golden-ratio multipliers).
+C1 = np.int32(0x9E3779B1 - 2**32)
+C2 = np.int32(0x85EBCA77 - 2**32)
+
+
+def merge_runs_numpy(runs):
+    """Merge sorted (keys, vals) runs with newest-wins reconciliation.
+
+    ``runs`` is ordered newest-first. Returns a single sorted, unique run.
+    """
+    runs = [r for r in runs if len(r[0])]
+    if not runs:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    if len(runs) == 1:
+        return runs[0]
+    keys = np.concatenate([r[0] for r in runs])
+    vals = np.concatenate([r[1] for r in runs])
+    # Stable sort by key keeps the newest occurrence first within equal keys
+    # because runs are concatenated newest-first.
+    order = np.argsort(keys, kind="stable")
+    keys, vals = keys[order], vals[order]
+    keep = np.ones(len(keys), bool)
+    keep[1:] = keys[1:] != keys[:-1]
+    return keys[keep], vals[keep]
+
+
+def _bloom_slots(keys, n_slots: int, k_hashes: int) -> np.ndarray:
+    """[K, k] slot indices; int32 wraparound arithmetic matches the jnp
+    oracle in kernels/bloom/ref.py."""
+    k32 = np.asarray(keys).astype(np.int32)
+    h1 = (k32 * C1) % np.int32(n_slots)
+    h2 = ((k32 * C2) | np.int32(1)) % np.int32(n_slots)
+    j = np.arange(k_hashes, dtype=np.int64)
+    return (h1.astype(np.int64)[:, None] + j[None, :]
+            * h2.astype(np.int64)[:, None]) % n_slots
+
+
+class NumpyBackend(ExecutionBackend):
+    name = "numpy"
+
+    def __init__(self, *, k_hashes: int = BLOOM_K_HASHES):
+        self.k_hashes = k_hashes
+
+    def merge_runs(self, runs):
+        return merge_runs_numpy(runs)
+
+    def bloom_build(self, keys):
+        # Membership bits only (bool, not counts): filters are cached per
+        # SSTable for the table's lifetime, so resident size matters.
+        _, n_slots = bloom_sizing(len(keys))
+        slots = _bloom_slots(keys, n_slots, self.k_hashes).reshape(-1)
+        filt = np.zeros(n_slots, bool)
+        filt[slots] = True
+        return filt
+
+    def bloom_probe(self, filt, keys):
+        if len(keys) == 0:
+            return np.zeros(0, bool)
+        slots = _bloom_slots(keys, filt.shape[0], self.k_hashes)
+        return filt[slots].all(axis=-1)
+
+    def lookup_batch(self, sorted_keys, queries):
+        pos = np.searchsorted(sorted_keys, queries)
+        inb = pos < len(sorted_keys)
+        found = np.zeros(len(queries), bool)
+        safe = np.minimum(pos, len(sorted_keys) - 1)
+        found[inb] = sorted_keys[safe[inb]] == np.asarray(queries)[inb]
+        return pos.astype(np.int64), found
+
+
+register_backend("numpy", NumpyBackend)

@@ -1,0 +1,143 @@
+"""Pallas execution backend: routes the engine's primitives through the
+TPU kernels in ``repro.kernels.{merge,bloom}``.
+
+Runs in interpret mode on CPU (functional parity, no TPU required) and
+compiled on TPU. All entry points bucket their operand sizes to powers of
+two (sentinel padding) so the jitted kernels compile once per size bucket
+instead of once per exact run length.
+
+jax is imported lazily (on first instantiation), keeping the default numpy
+path jax-free. Keys/values outside the kernels' int32 domain (negative
+keys, magnitudes at/above 2**31 - 1) fall back to the numpy reference per
+call; the engine never produces such keys in normal operation, but
+correctness must not depend on that.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .backend import (BLOOM_K_HASHES, ExecutionBackend, bloom_sizing,
+                      next_pow2, register_backend)
+from .numpy_backend import NumpyBackend
+
+_INT32_MAX = 2**31 - 1
+
+
+def _int32_safe_keys(arrs) -> bool:
+    return all(len(a) == 0 or (int(a.min()) >= 0
+                               and int(a.max()) < _INT32_MAX)
+               for a in arrs)
+
+
+def _int32_safe_sorted(a) -> bool:
+    """O(1) domain check for a sorted run: the endpoints bound the rest."""
+    return len(a) == 0 or (int(a[0]) >= 0 and int(a[-1]) < _INT32_MAX)
+
+
+def _int32_safe_vals(arrs) -> bool:
+    return all(len(a) == 0 or (int(a.min()) > -_INT32_MAX - 1
+                               and int(a.max()) <= _INT32_MAX)
+               for a in arrs)
+
+
+class PallasBackend(ExecutionBackend):
+    name = "pallas"
+
+    def __init__(self, *, interpret: bool | None = None,
+                 merge_tile: int = 512, k_hashes: int = BLOOM_K_HASHES):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.bloom import ops as bloom_ops
+        from repro.kernels.merge import ops as merge_ops
+        self._bloom_ops = bloom_ops
+        self._merge_ops = merge_ops
+        self._jnp = jnp
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+        self.merge_tile = merge_tile
+        self.k_hashes = k_hashes
+        self._fallback = NumpyBackend(k_hashes=k_hashes)
+        self._searchsorted = jax.jit(lambda a, v: jnp.searchsorted(a, v))
+        self.fallback_calls = 0     # out-of-int32-domain merges/probes
+
+    # -- merge ---------------------------------------------------------------
+    def merge_runs(self, runs):
+        runs = [(np.asarray(k), np.asarray(v)) for k, v in runs if len(k)]
+        if len(runs) <= 1:
+            return self._fallback.merge_runs(runs)
+        if not (all(_int32_safe_sorted(k) for k, _ in runs)
+                and _int32_safe_vals([v for _, v in runs])):
+            self.fallback_calls += 1
+            return self._fallback.merge_runs(runs)
+        keys, vals = self._merge_ops.merge_runs_device(
+            runs, tile=self.merge_tile, interpret=self.interpret)
+        return keys.astype(np.int64), vals.astype(np.int64)
+
+    # -- bloom ---------------------------------------------------------------
+    def bloom_build(self, keys):
+        keys = np.asarray(keys)          # an SSTable's keys: sorted run
+        n_pad, n_slots = bloom_sizing(len(keys))
+        if not _int32_safe_sorted(keys):
+            self.fallback_calls += 1
+            return ("numpy", self._fallback.bloom_build(keys))
+        filt = self._bloom_ops.bloom_build_run(
+            keys, n_keys_padded=n_pad, n_slots=n_slots,
+            k_hashes=self.k_hashes, interpret=self.interpret)
+        # Cache membership bits on the host, not the kernel's int32 counts:
+        # filters live as long as their SSTable, so resident size matters
+        # (bool is 4x smaller; re-widened to int32 at probe time).
+        return ("pallas", np.asarray(filt) != 0)
+
+    def bloom_probe(self, filt, keys):
+        keys = np.asarray(keys)
+        kind, f = filt
+        if kind == "numpy":
+            return self._fallback.bloom_probe(f, keys)
+        if len(keys) == 0:
+            return np.zeros(0, bool)
+        if not ((keys >= 0) & (keys < _INT32_MAX)).all():
+            # Out-of-int32-domain queries: probe through the host hash path
+            # on the flattened membership bits. The kernel's [128, W] layout
+            # flattens to exactly the numpy backend's flat filter (slot =
+            # row*W + col), and both hash via the same int32 wraparound, so
+            # results -- including aliasing false positives -- stay
+            # bit-identical across backends and false negatives remain
+            # impossible for keys that were inserted via the same wrap.
+            self.fallback_calls += 1
+            return self._fallback.bloom_probe(f.reshape(-1), keys)
+        return self._bloom_ops.bloom_probe_run(
+            f, keys, k_hashes=self.k_hashes, interpret=self.interpret)
+
+    # -- point lookups -------------------------------------------------------
+    def lookup_batch(self, sorted_keys, queries):
+        sorted_keys = np.asarray(sorted_keys)
+        queries = np.asarray(queries)
+        if len(queries) == 0:
+            return np.zeros(0, np.int64), np.zeros(0, bool)
+        if not (_int32_safe_sorted(sorted_keys)
+                and _int32_safe_keys([queries])):
+            self.fallback_calls += 1
+            return self._fallback.lookup_batch(sorted_keys, queries)
+        # Bucket both operands so the jitted searchsorted compiles once per
+        # (run, batch) size bucket: the run pads with an INT_MAX sentinel
+        # (never matched -- keys are int32-safe), queries pad by repeating
+        # their last element (results discarded).
+        n, q = len(sorted_keys), len(queries)
+        sk = np.pad(sorted_keys.astype(np.int32),
+                    (0, next_pow2(n) - n), constant_values=_INT32_MAX)
+        qk = np.pad(queries.astype(np.int32),
+                    (0, next_pow2(q) - q), mode="edge")
+        jnp = self._jnp
+        pos = np.asarray(self._searchsorted(jnp.asarray(sk),
+                                            jnp.asarray(qk)))[:q]
+        pos = np.minimum(pos.astype(np.int64), n)
+        inb = pos < n
+        found = np.zeros(q, bool)
+        safe = np.minimum(pos, n - 1)
+        found[inb] = sorted_keys[safe[inb]] == queries[inb]
+        return pos, found
+
+
+register_backend("pallas", PallasBackend)

@@ -14,8 +14,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..engine import get_backend
 from .memtable import MemComponentBase, MemStats
-from .sstable import merge_runs
 
 _INF = 2**62
 
@@ -88,7 +88,9 @@ class AccordionMemComponent(MemComponentBase):
     INDEX_ENTRY_BYTES = 16           # key + offset in the value log
 
     def __init__(self, *, entry_bytes: int, active_bytes_max: int,
-                 merge_data: bool, pipeline_threshold: int = 4, **_):
+                 merge_data: bool, pipeline_threshold: int = 4,
+                 backend=None, **_):
+        self.backend = backend or get_backend()
         self.entry_bytes = entry_bytes
         self.active_bytes_max = active_bytes_max
         self.merge_data = merge_data            # Accordion-data vs -index
@@ -128,7 +130,7 @@ class AccordionMemComponent(MemComponentBase):
         if len(self.segments) <= self.pipeline_threshold:
             return
         runs = [(s[0], s[1]) for s in reversed(self.segments)]  # newest first
-        keys, vals = merge_runs(runs)
+        keys, vals = self.backend.merge_runs(runs)
         self.stats.entries_merged += sum(len(r[0]) for r in runs)
         self.stats.merges += 1
         lsn_min = min(s[3] for s in self.segments)
@@ -173,6 +175,29 @@ class AccordionMemComponent(MemComponentBase):
                 return True, int(vals[i])
         return False, 0
 
+    def lookup_batch(self, qkeys):
+        qkeys = np.asarray(qkeys, np.int64)
+        n = len(qkeys)
+        found = np.zeros(n, bool)
+        vals = np.zeros(n, np.int64)
+        a = self.active
+        for i, k in enumerate(qkeys.tolist()):
+            v = a.get(k)
+            if v is not None:
+                found[i] = True
+                vals[i] = v
+        for keys, segvals, *_ in reversed(self.segments):
+            unresolved = np.flatnonzero(~found)
+            if not len(unresolved):
+                break
+            if not len(keys):
+                continue
+            pos, hit = self.backend.lookup_batch(keys, qkeys[unresolved])
+            gidx = unresolved[hit]
+            found[gidx] = True
+            vals[gidx] = segvals[pos[hit]]
+        return found, vals
+
     def scan_runs(self, lo: int, hi: int):
         out = []
         ks = np.array([k for k in self.active if lo <= k <= hi], np.int64)
@@ -192,7 +217,7 @@ class AccordionMemComponent(MemComponentBase):
         if not self.segments:
             return []
         runs = [(s[0], s[1]) for s in reversed(self.segments)]
-        keys, vals = merge_runs(runs)
+        keys, vals = self.backend.merge_runs(runs)
         if len(runs) > 1:
             self.stats.entries_merged += sum(len(r[0]) for r in runs)
         lsn_min = min(s[3] for s in self.segments)

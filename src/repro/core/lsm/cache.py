@@ -149,6 +149,17 @@ class Disk:
             if self.ghost is not None:
                 self.ghost.on_disk_read((sst_id, page_index), merge=False)
 
+    def query_pin_many(self, sst_id: int, page_indices) -> None:
+        """Batched query pins: one pin (hit-or-miss accounted) per entry.
+
+        Accounting is identical to issuing ``query_pin`` per page in order,
+        so batched reads and the scalar loop produce the same I/O counters;
+        repeated pins of one page within a batch hit the cache after the
+        first miss, exactly as in the scalar path.
+        """
+        for p in page_indices:
+            self.query_pin(sst_id, int(p))
+
     def merge_pin(self, sst_id: int, page_index: int) -> None:
         self.stats.merge_pins += 1
         if not self.cache.pin((sst_id, page_index)):

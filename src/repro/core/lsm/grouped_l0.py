@@ -137,6 +137,12 @@ class GroupedL0:
         self.groups = [g for g in self.groups if g]
 
     # -- reads ---------------------------------------------------------------
+    def lookup_tiers(self):
+        """Disjoint, sorted table lists in probe order (newest group
+        first); each tier holds at most one candidate per key. Used by the
+        batched read path."""
+        return list(reversed(self.groups))
+
     def tables_covering(self, key: int):
         """SSTables possibly containing ``key``, newest group first."""
         out = []
@@ -196,6 +202,11 @@ class FlatL0:
     def remove(self, tables) -> None:
         ids = {id(t) for t in tables}
         self.runs = [s for s in self.runs if id(s) not in ids]
+
+    def lookup_tiers(self):
+        """Each run is its own tier (runs may overlap each other), newest
+        first -- matching the scalar probe order."""
+        return [[s] for s in reversed(self.runs)]
 
     def tables_covering(self, key: int):
         return [s for s in reversed(self.runs) if s.covers(key)]

@@ -112,6 +112,12 @@ class DiskLevels:
         self.levels[i][:] = [s for s in self.levels[i] if id(s) not in ids]
 
     # -- reads ---------------------------------------------------------------
+    def lookup_tiers(self):
+        """Disjoint, sorted table lists in probe order (L1 .. LN); each
+        tier holds at most one candidate per key. Used by the batched read
+        path."""
+        return list(self.levels)
+
     def tables_covering(self, key: int):
         """One candidate SSTable per level (levels are disjoint), top-down."""
         out = []

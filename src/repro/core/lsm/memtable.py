@@ -17,7 +17,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .sstable import SSTable, merge_runs, partition_run, sstable_from_run
+from ..engine import get_backend
+from .sstable import (SSTable, partition_run, probe_tier,
+                      sstable_from_run)
 
 
 @dataclass
@@ -45,6 +47,22 @@ class MemComponentBase:
     def lookup(self, key: int):
         raise NotImplementedError
 
+    def lookup_batch(self, keys):
+        """Batched point lookups; returns (found bool[n], vals int64[n]).
+
+        Default: scalar fallback loop (monolithic baselines override or
+        inherit this; the partitioned component vectorizes it).
+        """
+        keys = np.asarray(keys, np.int64)
+        found = np.zeros(len(keys), bool)
+        vals = np.zeros(len(keys), np.int64)
+        for i, k in enumerate(keys.tolist()):
+            f, v = self.lookup(int(k))
+            if f:
+                found[i] = True
+                vals[i] = v
+        return found, vals
+
     def is_empty(self) -> bool:
         raise NotImplementedError
 
@@ -70,11 +88,12 @@ class PartitionedMemComponent(MemComponentBase):
     """§4.1.1: in-memory partitioned-leveling LSM-tree."""
 
     def __init__(self, *, entry_bytes: int, page_bytes: int,
-                 active_bytes_max: int, size_ratio: int = 10):
+                 active_bytes_max: int, size_ratio: int = 10, backend=None):
         self.entry_bytes = entry_bytes
         self.page_bytes = page_bytes
         self.active_bytes_max = active_bytes_max
         self.T = size_ratio
+        self.backend = backend or get_backend()
         self.active: dict = {}            # key -> (val, lsn)
         self.active_lsn_min: int | None = None
         self.levels: list[list[SSTable]] = []   # M1..Mk
@@ -145,7 +164,7 @@ class PartitionedMemComponent(MemComponentBase):
         olds = lvl[i:j]
         del lvl[i:j]
         runs = [(s.keys, s.vals) for s in newer] + [(s.keys, s.vals) for s in olds]
-        keys, vals = merge_runs(runs)
+        keys, vals = self.backend.merge_runs(runs)
         self.stats.entries_merged += sum(len(r[0]) for r in runs)
         self.stats.merges += 1
         lsn_min = min(s.lsn_min for s in newer + olds)
@@ -230,7 +249,8 @@ class PartitionedMemComponent(MemComponentBase):
             del lvl[i:j]
         while self.levels and not self.levels[-1]:
             self.levels.pop()
-        keys, vals = merge_runs([(s.keys, s.vals) for s in group])
+        keys, vals = self.backend.merge_runs([(s.keys, s.vals)
+                                              for s in group])
         self.stats.entries_merged += sum(s.num_entries for s in group)
         return [(keys, vals, min(s.lsn_min for s in group),
                  max(s.lsn_max for s in group))]
@@ -244,7 +264,7 @@ class PartitionedMemComponent(MemComponentBase):
         runs = []
         for lvl in self.levels:                  # newer levels first
             runs.extend((s.keys, s.vals) for s in lvl)
-        keys, vals = merge_runs(runs)
+        keys, vals = self.backend.merge_runs(runs)
         self.stats.entries_merged += sum(s.num_entries for s in ssts)
         self.levels = []
         return [(keys, vals, min(s.lsn_min for s in ssts),
@@ -262,6 +282,26 @@ class PartitionedMemComponent(MemComponentBase):
                 if found:
                     return True, val
         return False, 0
+
+    def lookup_batch(self, keys):
+        keys = np.asarray(keys, np.int64)
+        n = len(keys)
+        found = np.zeros(n, bool)
+        vals = np.zeros(n, np.int64)
+        if self.active:
+            a = self.active
+            for i, k in enumerate(keys.tolist()):
+                hit = a.get(k)
+                if hit is not None:
+                    found[i] = True
+                    vals[i] = hit[0]
+        unresolved = ~found
+        for lvl in self.levels:                  # newest level first
+            if not unresolved.any():
+                break
+            probe_tier(lvl, keys, found, vals, unresolved,
+                       self.backend.lookup_batch)
+        return found, vals
 
     def scan_runs(self, lo: int, hi: int):
         """All in-memory (keys, vals) runs overlapping [lo,hi], newest first."""

@@ -23,25 +23,65 @@ def reset_sst_ids() -> None:
     _SST_IDS = itertools.count()
 
 
-def merge_runs(runs):
-    """Merge sorted (keys, vals) runs with newest-wins reconciliation.
+# Reference k-way merge now lives with the execution backends (the engine
+# dispatches merges through repro.core.engine); re-exported here for
+# back-compat with existing callers/tests.
+from ..engine.numpy_backend import merge_runs_numpy as merge_runs  # noqa: E402
 
-    ``runs`` is ordered newest-first. Returns a single sorted, unique run.
+
+def assign_queries(tables, qkeys):
+    """Map each query key to the table covering it within a *disjoint,
+    min_key-sorted* table list (one memory/disk level, or one L0 group).
+
+    Returns (table_idx, covered): per-query table index (clipped) and a
+    bool mask of queries that fall inside some table's key range.
     """
-    runs = [r for r in runs if len(r[0])]
-    if not runs:
-        return np.empty(0, np.int64), np.empty(0, np.int64)
-    if len(runs) == 1:
-        return runs[0]
-    keys = np.concatenate([r[0] for r in runs])
-    vals = np.concatenate([r[1] for r in runs])
-    # Stable sort by key keeps the newest occurrence first within equal keys
-    # because runs are concatenated newest-first.
-    order = np.argsort(keys, kind="stable")
-    keys, vals = keys[order], vals[order]
-    keep = np.ones(len(keys), bool)
-    keep[1:] = keys[1:] != keys[:-1]
-    return keys[keep], vals[keep]
+    if not tables:
+        return (np.zeros(len(qkeys), np.int64),
+                np.zeros(len(qkeys), bool))
+    starts = np.fromiter((t.min_key for t in tables), np.int64, len(tables))
+    ends = np.fromiter((t.max_key for t in tables), np.int64, len(tables))
+    ti = np.searchsorted(starts, qkeys, side="right") - 1
+    ok = ti >= 0
+    ti = np.clip(ti, 0, len(tables) - 1)
+    ok &= qkeys <= ends[ti]
+    return ti, ok
+
+
+def probe_tier(tables, keys, found, vals, unresolved, lookup_batch, *,
+               pre_probe=None, post_lookup=None):
+    """Probe one disjoint, sorted tier with every still-unresolved key,
+    scattering hits into ``found``/``vals``/``unresolved`` in place.
+
+    The single home of the batched probe-and-scatter dance (vectorized
+    table assignment, per-table backend lookup, double-indexed hit
+    scatter) shared by the tree's disk tiers and the partitioned memory
+    component's levels. Hooks carry the disk-only concerns:
+
+      pre_probe(sst, qk) -> bool mask of probes worth a binary search
+        (the tree pins Bloom pages and probes the filter here);
+      post_lookup(sst, pos, hit) (the tree pins leaf pages here).
+    """
+    idx_un = np.flatnonzero(unresolved)
+    if not len(idx_un) or not tables:
+        return
+    q = keys[idx_un]
+    ti, ok = assign_queries(tables, q)
+    for t_i in np.unique(ti[ok]):
+        sst = tables[t_i]
+        sel = np.flatnonzero(ok & (ti == t_i))
+        if pre_probe is not None:
+            positive = pre_probe(sst, q[sel])
+            if not positive.any():
+                continue
+            sel = sel[positive]
+        pos, hit = lookup_batch(sst.keys, q[sel])
+        if post_lookup is not None:
+            post_lookup(sst, pos, hit)
+        gidx = idx_un[sel[hit]]
+        found[gidx] = True
+        vals[gidx] = sst.vals[pos[hit]]
+        unresolved[gidx] = False
 
 
 @dataclass(eq=False)  # identity equality: SSTables live in Python lists
@@ -55,6 +95,8 @@ class SSTable:
     entry_bytes: int
     page_bytes: int
     sst_id: int = field(default_factory=lambda: next(_SST_IDS))
+    # Lazily built, backend-owned Bloom filter: (backend_name, filter).
+    bloom: tuple | None = field(default=None, repr=False)
 
     def __post_init__(self):
         assert len(self.keys) == len(self.vals)

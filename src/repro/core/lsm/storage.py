@@ -20,6 +20,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..engine import available_backends, get_backend
 from ..tuner.simcache import GhostCache
 from .baselines import AccordionMemComponent, BTreeMemComponent
 from .cache import ClockCache, Disk
@@ -92,11 +93,16 @@ class StoreConfig:
     static_num_levels: int | None = None
     forced_flush_kind: str | None = None       # for the Fig. 9 ablation
     accordion_pipeline: int = 4
+    # Execution backend for merges/Bloom/batched lookups ("numpy" |
+    # "pallas"); None defers to the REPRO_LSM_BACKEND env var, then "numpy".
+    backend: str | None = None
     time_model: TimeModel = field(default_factory=TimeModel)
 
     def validate(self):
         assert self.scheme in SCHEMES, self.scheme
         assert self.flush_policy in POLICIES, self.flush_policy
+        assert self.backend is None or self.backend in available_backends(), \
+            self.backend
         assert self.write_memory_bytes + self.sim_cache_bytes \
             <= self.total_memory_bytes
         return self
@@ -105,6 +111,7 @@ class StoreConfig:
 class LSMStore:
     def __init__(self, cfg: StoreConfig):
         self.cfg = cfg.validate()
+        self.backend = get_backend(cfg.backend)
         self.ghost = GhostCache(cfg.sim_cache_bytes // cfg.page_bytes)
         cache_pages = max(
             0, (cfg.total_memory_bytes - cfg.write_memory_bytes
@@ -132,14 +139,15 @@ class LSMStore:
             mem = PartitionedMemComponent(
                 entry_bytes=e, page_bytes=cfg.page_bytes,
                 active_bytes_max=cfg.active_sstable_bytes,
-                size_ratio=cfg.size_ratio)
+                size_ratio=cfg.size_ratio, backend=self.backend)
         elif cfg.scheme.startswith("btree"):
-            mem = BTreeMemComponent(entry_bytes=e)
+            mem = BTreeMemComponent(entry_bytes=e, backend=self.backend)
         else:
             mem = AccordionMemComponent(
                 entry_bytes=e, active_bytes_max=cfg.active_sstable_bytes,
                 merge_data=cfg.scheme == "accordion-data",
-                pipeline_threshold=cfg.accordion_pipeline)
+                pipeline_threshold=cfg.accordion_pipeline,
+                backend=self.backend)
         tree = LSMTree(
             name, disk=self.disk, entry_bytes=e, mem_component=mem,
             sstable_bytes=cfg.sstable_bytes, size_ratio=cfg.size_ratio,
@@ -147,7 +155,8 @@ class LSMStore:
             l0_target_groups=cfg.l0_target_groups,
             l0_greedy=cfg.l0_greedy, l0_grouped=cfg.l0_grouped,
             dynamic_levels=cfg.dynamic_levels,
-            static_num_levels=cfg.static_num_levels)
+            static_num_levels=cfg.static_num_levels,
+            backend=self.backend)
         self.trees[name] = tree
         ds = dataset or name
         self.datasets.setdefault(ds, []).append(name)
@@ -347,6 +356,17 @@ class LSMStore:
         if op:
             self.disk.stats.ops += 1
         return self.trees[tree_name].lookup(int(key))
+
+    def read_batch(self, tree_name: str, keys, *, op: bool = True):
+        """Batched point lookups: one logical op per key, probes vectorized
+        end-to-end through the tree's execution backend.
+
+        Returns (found bool[n], vals int64[n]).
+        """
+        keys = np.asarray(keys, np.int64)
+        if op:
+            self.disk.stats.ops += len(keys)
+        return self.trees[tree_name].lookup_batch(keys)
 
     def scan(self, tree_name: str, lo: int, n: int, *, op: bool = True):
         if op:

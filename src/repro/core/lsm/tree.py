@@ -1,22 +1,25 @@
 """LSMTree: one tree = memory component + grouped L0 + disk levels (§4).
 
 All disk I/O is accounted through the shared ``Disk`` (page pins via the
-buffer cache, flush/merge writes). Bloom filters are probed per SSTable for
-point lookups with a simulated 1% false-positive rate. Per-tree statistics
-feed the flush policies (§4.2) and the memory tuner (§5).
+buffer cache, flush/merge writes). Point lookups are batched end-to-end:
+``lookup_batch`` probes the memory component, L0 groups, and disk levels
+with vectorized range assignment and issues one Bloom-probe kernel call
+per (SSTable, batch) through the configured execution backend; compaction
+merges dispatch through the same backend (``repro.core.engine``). Per-tree
+statistics feed the flush policies (§4.2) and the memory tuner (§5).
 """
 from __future__ import annotations
 
-import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
+from ..engine import get_backend
 from .cache import Disk
 from .grouped_l0 import FlatL0, GroupedL0
 from .levels import DiskLevels
 from .memtable import MemComponentBase, PartitionedMemComponent
-from .sstable import merge_runs, partition_run
+from .sstable import partition_run, probe_tier
 
 
 @dataclass
@@ -32,12 +35,6 @@ class TreeStats:
     lookups: int = 0
 
 
-def _bloom_false_positive(sst_id: int, key: int, fpr_permille: int = 10) -> bool:
-    """Deterministic pseudo-random 1% bloom false positive."""
-    h = zlib.crc32(np.int64(key).tobytes() + np.int64(sst_id).tobytes())
-    return (h % 1000) < fpr_permille
-
-
 class LSMTree:
     def __init__(self, name: str, *, disk: Disk, entry_bytes: int,
                  mem_component: MemComponentBase,
@@ -49,8 +46,9 @@ class LSMTree:
                  l0_grouped: bool = True,
                  dynamic_levels: bool = True,
                  static_num_levels: int | None = None,
-                 bloom_fpr_permille: int = 10):
+                 backend=None):
         self.name = name
+        self.backend = backend or get_backend()
         self.disk = disk
         self.entry_bytes = entry_bytes
         self.mem = mem_component
@@ -63,7 +61,6 @@ class LSMTree:
                                  dynamic=dynamic_levels,
                                  static_num_levels=static_num_levels)
         self.stats = TreeStats()
-        self.bloom_fpr_permille = bloom_fpr_permille
         # §4.1.4 adaptive flush window: (log_pos, bytes) of recent partial flushes
         self.partial_flush_window: list = []
 
@@ -194,7 +191,7 @@ class LSMTree:
         read += olds
         for t in read:
             self.disk.merge_read_sst(t)
-        keys, vals = merge_runs(runs)
+        keys, vals = self.backend.merge_runs(runs)
         self.disk.stats.entries_merged_disk += sum(len(r[0]) for r in runs)
         lsn_min = min(t.lsn_min for t in read)
         lsn_max = max(t.lsn_max for t in read)
@@ -213,7 +210,7 @@ class LSMTree:
         for t in [victim] + olds:
             self.disk.merge_read_sst(t)
         runs = [(victim.keys, victim.vals)] + [(t.keys, t.vals) for t in olds]
-        keys, vals = merge_runs(runs)
+        keys, vals = self.backend.merge_runs(runs)
         self.disk.stats.entries_merged_disk += sum(len(r[0]) for r in runs)
         outs = self._merge_write_out(
             keys, vals, min(t.lsn_min for t in [victim] + olds),
@@ -253,20 +250,51 @@ class LSMTree:
         self.levels.adjust(write_mem_share)
 
     # -- reads ---------------------------------------------------------------
+    def _bloom(self, sst):
+        """Backend-built Bloom filter of one SSTable, cached on the table
+        (rebuilt if a differently-named backend owns the cached one)."""
+        if sst.bloom is None or sst.bloom[0] != self.backend.name:
+            sst.bloom = (self.backend.name,
+                         self.backend.bloom_build(sst.keys))
+        return sst.bloom[1]
+
+    def _bloom_gate(self, sst, qk):
+        """pre_probe hook: pin Bloom pages (one pin per probed key, as in
+        the scalar path) and issue the Bloom probe as one backend call."""
+        self.disk.query_pin_many(sst.sst_id, [-1] * len(qk))
+        return self.backend.bloom_probe(self._bloom(sst), qk)
+
+    def _leaf_pins(self, sst, pos, hit):
+        """post_lookup hook: touch the leaf page of every Bloom positive."""
+        epp = sst.entries_per_page
+        pages = np.where(hit, pos,
+                         np.minimum(pos, sst.num_entries - 1)) // epp
+        self.disk.query_pin_many(sst.sst_id, pages)
+
+    def lookup_batch(self, keys):
+        """Batched point lookups; returns (found bool[n], vals int64[n]).
+
+        Probe order matches the scalar semantics: memory component, then L0
+        newest-group-first, then disk levels top-down; a key stops probing
+        once resolved. Bloom probes are one backend call per (SSTable,
+        batch)."""
+        keys = np.asarray(keys, np.int64)
+        self.stats.lookups += len(keys)
+        found, vals = self.mem.lookup_batch(keys)
+        unresolved = ~found
+        for tier in self.l0.lookup_tiers() + self.levels.lookup_tiers():
+            if not unresolved.any():
+                break
+            probe_tier(tier, keys, found, vals, unresolved,
+                       self.backend.lookup_batch,
+                       pre_probe=self._bloom_gate,
+                       post_lookup=self._leaf_pins)
+        return found, vals
+
     def lookup(self, key: int):
-        self.stats.lookups += 1
-        found, val = self.mem.lookup(key)
-        if found:
-            return True, val
-        for sst in self.l0.tables_covering(key) + self.levels.tables_covering(key):
-            self.disk.query_pin(sst.sst_id, -1)          # bloom filter pages
-            hit, val, page = sst.lookup(key)
-            if hit or _bloom_false_positive(sst.sst_id, key,
-                                            self.bloom_fpr_permille):
-                self.disk.query_pin(sst.sst_id, page)    # leaf page
-                if hit:
-                    return True, val
-        return False, 0
+        """Scalar lookup: a batch of one (same probe path and accounting)."""
+        found, vals = self.lookup_batch(np.array([key], np.int64))
+        return bool(found[0]), int(vals[0])
 
     def scan(self, lo: int, n_entries: int):
         """Range scan with reconciliation: pins the pages of every
@@ -295,5 +323,5 @@ class LSMTree:
             runs.append((sst.keys[i:j], sst.vals[i:j]))
         if not runs:
             return 0
-        keys, _ = merge_runs(runs)
+        keys, _ = self.backend.merge_runs(runs)
         return int(len(keys))

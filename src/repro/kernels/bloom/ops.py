@@ -5,12 +5,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from ..sizing import next_pow2, slots_for  # noqa: F401  (re-exported)
 from .bloom import build_filter, probe_filter
 from .ref import build_ref, probe_ref
-
-
-def slots_for(n_keys: int, bits_per_key: int = 10) -> int:
-    return max(128, -(-n_keys * bits_per_key // 128) * 128)
 
 
 def bloom_build(keys, *, bits_per_key: int = 10, k_hashes: int = 7,
@@ -26,6 +23,58 @@ def bloom_build(keys, *, bits_per_key: int = 10, k_hashes: int = 7,
         return build_filter(keys, n_slots=n_slots, k_hashes=k_hashes,
                             interpret=interpret)
     return build_ref(keys, n_slots, k_hashes)
+
+
+def bloom_build_run(keys, *, n_keys_padded: int | None = None,
+                    n_slots: int | None = None, bits_per_key: int = 10,
+                    k_hashes: int = 7, use_kernel: bool = True,
+                    interpret: bool = True):
+    """Run-sized engine entry point: build a filter over one SSTable's keys.
+
+    Pads the key set to ``n_keys_padded`` (default: next power of two) by
+    repeating the first key -- idempotent for membership -- and sizes the
+    filter at exactly ``n_slots``, so an engine that buckets run sizes
+    reuses compiled kernels across SSTables of similar size.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    n = keys.shape[0]
+    assert n >= 1, "empty key set"
+    if n_keys_padded is None:
+        n_keys_padded = next_pow2(n, lo=256)
+    if n_slots is None:
+        n_slots = slots_for(n_keys_padded, bits_per_key)
+    tile = 256
+    total = -(-max(n_keys_padded, n) // tile) * tile
+    if total > n:
+        keys = jnp.concatenate(
+            [keys, jnp.broadcast_to(keys[:1], (total - n,))])
+    if use_kernel:
+        return build_filter(keys, n_slots=n_slots, k_hashes=k_hashes,
+                            interpret=interpret)
+    return build_ref(keys, n_slots, k_hashes)
+
+
+def bloom_probe_run(filt, keys, *, k_hashes: int = 7,
+                    use_kernel: bool = True, interpret: bool = True):
+    """Run-sized probe: bucket the query batch to a power of two (>= 256)
+    so per-batch probes against many SSTables share compiled kernels.
+
+    ``filt`` may be any integer/bool dtype (engines cache membership bits
+    as bool to cut resident size); it is widened to the kernel's int32
+    on-device, so only the 1-byte representation crosses the host boundary.
+    """
+    filt = jnp.asarray(filt).astype(jnp.int32)
+    keys = jnp.asarray(keys, jnp.int32)
+    n = keys.shape[0]
+    m = next_pow2(max(1, n), lo=256)
+    if m > n:
+        keys = jnp.concatenate([keys, jnp.zeros((m - n,), jnp.int32)])
+    if use_kernel:
+        out = probe_filter(filt, keys, k_hashes=k_hashes,
+                           interpret=interpret)
+    else:
+        out = probe_ref(filt, keys, k_hashes)
+    return np.asarray(out[:n]).astype(bool)
 
 
 def bloom_probe(filt, keys, *, k_hashes: int = 7, use_kernel: bool = True,

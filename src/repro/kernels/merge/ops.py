@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..sizing import next_pow2
 from .merge import merge_tiles
 from .ref import merge_tiles_ref
 
@@ -100,3 +101,36 @@ def merge_runs_dedup(ka, va, kb, vb, **kw):
                                          jnp.asarray(vb, jnp.int32), **kw)
     keys, vals, keep = map(np.asarray, (keys, vals, keep))
     return keys[keep], vals[keep]
+
+
+def _pad_run(k, v, n):
+    pad = n - k.shape[0]
+    if pad:
+        k = np.concatenate([k, np.full(pad, INT_MAX, np.int32)])
+        v = np.concatenate([v, np.zeros(pad, np.int32)])
+    return k, v
+
+
+def merge_runs_device(runs, *, tile: int = 512, use_kernel: bool = True,
+                      interpret: bool = True):
+    """Run-sized engine entry point: fold k sorted runs (ordered newest
+    first, keys in [0, INT_MAX)) into one deduped run with newest-wins
+    reconciliation.
+
+    Each operand is padded to a power-of-two length with INT_MAX sentinels
+    -- dropped by the kernel's keep-mask -- so the jitted tile composition
+    compiles once per size bucket rather than once per exact run length.
+    Returns dense int32 numpy (keys, vals).
+    """
+    rs = [(np.asarray(k, np.int32), np.asarray(v, np.int32))
+          for k, v in runs if len(k)]
+    if not rs:
+        return np.empty(0, np.int32), np.empty(0, np.int32)
+    ka, va = rs[0]
+    for kb, vb in rs[1:]:
+        ka_p, va_p = _pad_run(ka, va, next_pow2(ka.shape[0]))
+        kb_p, vb_p = _pad_run(kb, vb, next_pow2(kb.shape[0]))
+        ka, va = merge_runs_dedup(ka_p, va_p, kb_p, vb_p, tile=tile,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret)
+    return ka, va

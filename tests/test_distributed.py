@@ -2,6 +2,7 @@
 production sharding rules on a small mesh, pipeline parallelism, and
 elastic checkpoint resharding across different mesh sizes."""
 import json
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -11,6 +12,10 @@ REPO = Path(__file__).resolve().parents[1]
 
 def run_py(code: str, devices: int = 8) -> str:
     env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+           # keep the subprocess off any real accelerator: without this,
+           # images that bundle libtpu stall for minutes retrying the GCP
+           # TPU-metadata query before falling back to CPU
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
            "PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=env, timeout=600)

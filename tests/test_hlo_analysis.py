@@ -60,12 +60,13 @@ def test_collective_bytes_counted_with_group_size():
     code = """
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as PS
+from repro.compat import shard_map
 from repro.utils.hlo import analyze_hlo
 mesh = jax.make_mesh((8,), ("d",))
 def f(x):
-    return jax.shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
-                         in_specs=PS("d"), out_specs=PS(),
-                         check_vma=False)(x)
+    return shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
+                     in_specs=PS("d"), out_specs=PS(),
+                     check_vma=False)(x)
 x = jax.ShapeDtypeStruct((1024, 128), jnp.float32,
                          sharding=NamedSharding(mesh, PS("d")))
 hlo = jax.jit(f).lower(x).compile().as_text()
@@ -75,10 +76,13 @@ assert abs(c.collective_bytes - expect) / expect < 0.05, \\
     (c.collective_bytes, expect)
 print("OK")
 """
+    import os
     repo = Path(__file__).resolve().parents[1]
     r = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
         env={"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             # see tests/test_distributed.py: keep libtpu images on CPU
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
              "PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin"},
         timeout=300)
     assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-2000:]

@@ -3,7 +3,9 @@ sweeping shapes and skews (hypothesis for the run-level composition)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.merge.merge import merge_tiles
 from repro.kernels.merge.ops import merge_runs_dedup, merge_sorted_runs

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.lsm.cost_model import optimal_allocation
 from repro.core.lsm.storage import LSMStore, StoreConfig

@@ -3,7 +3,9 @@ mLSTM) must equal the naive step-by-step recurrence for any chunk size."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.ssm import chunked_decay_scan, decay_scan_step
 
