@@ -80,9 +80,10 @@ class Workload:
             tree = self._tree()
             r = self.rng.random()
             if r < write_frac:
+                # batched end-to-end: one ingest_run backend call plus one
+                # maintenance-scheduler tick per op batch
                 keys = self._keys(b)
-                self.store.write(tree, keys, keys, op=False)
-                self.store.note_ops(b)
+                self.store.write_batch(tree, keys, keys)
             elif r < write_frac + scan_frac:
                 for lo in self._keys(max(1, b // 16)):
                     self.store.scan(tree, int(lo), self.scan_len)

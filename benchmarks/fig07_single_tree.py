@@ -34,7 +34,12 @@ def one(scheme, workload, write_mem_mb, n_records, read_ops=30_000):
     return measure(store, lambda: w.run(n_ops, write_frac=wf, scan_frac=sf))
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
+    if smoke:   # tiny-ops CI preset: one point per scheme, wiring only
+        return [fmt_row(f"fig07/smoke/{scheme}",
+                        one(scheme, "write_heavy", 1, 20_000,
+                            read_ops=2_000)["throughput"])
+                for scheme in SCHEMES]
     rows = []
     n_recs = 300_000 if full else 150_000
     mems = [1, 2, 4, 8] if full else [2, 8]

@@ -31,9 +31,9 @@ def one(scheme, policy, write_mem_mb=4, n_txns=6_000):
     return m
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     rows = []
-    n = 12_000 if full else 4_000
+    n = 300 if smoke else (12_000 if full else 4_000)
     for scheme, policy, label in SCHEMES:
         m = one(scheme, policy, n_txns=n)
         rows.append(fmt_row(f"fig14/{label}", m["throughput"],

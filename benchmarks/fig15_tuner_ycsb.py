@@ -11,14 +11,15 @@ from repro.core.tuner.tuner import AdaptiveMemoryController, TunerConfig
 from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
 
 
-def one(write_ratio, total_mb, n_ops=400_000, n_records=150_000):
+def one(write_ratio, total_mb, n_ops=400_000, n_records=150_000,
+        ops_cycle=25_000):
     store = make_store(total_memory_bytes=total_mb * MB,
                        write_memory_bytes=2 * MB, max_log_bytes=6 * MB,
                        sim_cache_bytes=1 * MB, flush_policy="lsn")
     store.create_tree("t")
     bulk_load(store, "t", n_records)
     ctrl = AdaptiveMemoryController(store, TunerConfig(
-        min_step_bytes=256 * 1024, ops_cycle=25_000, min_write_mem=1 * MB))
+        min_step_bytes=256 * 1024, ops_cycle=ops_cycle, min_write_mem=1 * MB))
     w = Workload(store, ["t"], n_records)
     m = measure(store, lambda: w.run(
         n_ops, write_frac=write_ratio,
@@ -31,14 +32,16 @@ def one(write_ratio, total_mb, n_ops=400_000, n_records=150_000):
     return m
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     rows = []
-    ratios = [0.1, 0.25, 0.5] if full else [0.1, 0.5]
-    totals = [32, 96] if full else [32, 96]
-    n = 400_000 if full else 120_000
+    ratios = [0.1, 0.25, 0.5] if full else ([0.5] if smoke else [0.1, 0.5])
+    totals = [32, 96] if full else ([32] if smoke else [32, 96])
+    n = 400_000 if full else (12_000 if smoke else 120_000)
     for total in totals:
         for r in ratios:
-            m = one(r, total, n_ops=n)
+            # smoke: shrink the tuning cycle so the tuner actually ticks
+            m = one(r, total, n_ops=n,
+                    ops_cycle=3_000 if smoke else 25_000)
             rows.append(fmt_row(
                 f"fig15/total{total}MB/write{int(r*100)}", m["x_mb"],
                 f"steps={m['tuning_steps']};cost0={m['cost_first']:.3f};"

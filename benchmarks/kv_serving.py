@@ -1,8 +1,15 @@
-"""Beyond-paper: the memory-walls policies on the TPU serving path.
+"""Beyond-paper: the memory-walls policies on serving-shaped workloads.
 
-Compares a fixed 50/50 HBM split between the KV page pool and the prefix
-cache against the adaptive HBM tuner, under a prefix-reuse-heavy and an
-append-heavy phase. Cost = offload pages + recompute pages per op.
+Two scenarios:
+
+* **HBM split** -- fixed 50/50 HBM split between the KV page pool and the
+  prefix cache vs the adaptive HBM tuner, under a prefix-reuse-heavy and
+  an append-heavy phase. Cost = offload pages + recompute pages per op.
+* **LSM hot-key skew** -- a multi-tenant LSM store (one hot tree taking
+  most of a zipf-skewed write stream, three cold trees) driven through
+  the batched write path, so the maintenance scheduler has to arbitrate
+  flushes/merges *across* trees sharing one write memory. Compares the
+  §4.2 flush policies and a bounded per-tick merge budget.
 """
 from __future__ import annotations
 
@@ -11,7 +18,7 @@ import numpy as np
 from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
 from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
 
-from .common import fmt_row
+from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
 
 
 def drive(pool, tuner, n_ops, reuse_frac, rng, working_set=1600,
@@ -56,8 +63,27 @@ def one(adaptive: bool, n_ops=40_000):
             "total_cost": sum(costs)}
 
 
-def run(full: bool = False):
-    n = 80_000 if full else 24_000
+def lsm_hot_key(policy: str, n_ops: int, *, merge_budget=None,
+                n_trees=4, n_records=60_000, write_mem_bytes=1 * MB):
+    """Skewed multi-tenant serving: tree 0 takes ~85% of a zipf write
+    stream; the scheduler arbitrates cross-tree flushes/merges."""
+    store = make_store(write_memory_bytes=write_mem_bytes,
+                       max_log_bytes=8 * MB,
+                       flush_policy=policy, merge_budget=merge_budget)
+    names = [f"tenant{i}" for i in range(n_trees)]
+    for name in names:
+        store.create_tree(name)
+        bulk_load(store, name, n_records)
+    probs = [0.85] + [0.15 / (n_trees - 1)] * (n_trees - 1)
+    w = Workload(store, names, n_records, tree_probs=probs, seed=3)
+    m = measure(store, lambda: w.run(n_ops, write_frac=0.7))
+    m["carried_debt"] = store.scheduler.carried_debt
+    m["ticks"] = store.scheduler.ticks
+    return m
+
+
+def run(full: bool = False, smoke: bool = False):
+    n = 2_000 if smoke else (80_000 if full else 24_000)
     rows = []
     fixed = one(False, n)
     adap = one(True, n)
@@ -66,6 +92,23 @@ def run(full: bool = False):
     rows.append(fmt_row("kv_serving/adaptive", adap["total_cost"],
                         f"phase_costs={adap['costs']};"
                         f"final_pool={adap['pool_pages']}"))
+    n_lsm = 6_000 if smoke else (60_000 if full else 20_000)
+    n_recs = 8_000 if smoke else 60_000
+    # smoke shrinks the write memory so flush arbitration still triggers
+    wm = (MB // 4) if smoke else 1 * MB
+    for policy in ("mem", "lsn", "opt"):
+        m = lsm_hot_key(policy, n_lsm, n_records=n_recs,
+                        write_mem_bytes=wm)
+        rows.append(fmt_row(
+            f"kv_serving/lsm_hot_skew/{policy}", m["throughput"],
+            f"io_per_op={m['io_pages_per_op']:.3f};"
+            f"flushes_mem={m['flushes_mem']};flushes_log={m['flushes_log']}"))
+    m = lsm_hot_key("opt", n_lsm, merge_budget=4, n_records=n_recs,
+                    write_mem_bytes=wm)
+    rows.append(fmt_row(
+        "kv_serving/lsm_hot_skew/opt_budget4", m["throughput"],
+        f"io_per_op={m['io_pages_per_op']:.3f};"
+        f"carried_debt={m['carried_debt']};ticks={m['ticks']}"))
     return rows
 
 

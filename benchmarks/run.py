@@ -2,7 +2,9 @@
 
 Prints ``name,value,derived`` CSV (one line per measured point).
 Full-size figures: run each module directly, e.g.
-``python -m benchmarks.fig07_single_tree``.
+``python -m benchmarks.fig07_single_tree``. ``--smoke`` runs a tiny-ops
+subset (single-tree schemes, TPC-C, tuner, LSM hot-key skew) as a CI
+wiring check for the batched write path and the maintenance scheduler.
 """
 from __future__ import annotations
 
@@ -17,16 +19,22 @@ def main() -> None:
                    fig13_secondary, fig14_tpcc, fig15_tuner_ycsb,
                    fig16_tuner_accuracy, fig17_tuner_responsiveness,
                    kv_serving)
-    modules = [fig07_single_tree, fig08_memory_merge_overhead,
-               fig09_flush_heuristics, fig10_grouped_l0,
-               fig11_dynamic_levels, fig12_multi_primary, fig13_secondary,
-               fig14_tpcc, fig15_tuner_ycsb, fig16_tuner_accuracy,
-               fig17_tuner_responsiveness, kv_serving]
     full = "--full" in sys.argv
+    smoke = "--smoke" in sys.argv
+    if smoke:
+        modules = [fig07_single_tree, fig14_tpcc, fig15_tuner_ycsb,
+                   kv_serving]
+    else:
+        modules = [fig07_single_tree, fig08_memory_merge_overhead,
+                   fig09_flush_heuristics, fig10_grouped_l0,
+                   fig11_dynamic_levels, fig12_multi_primary, fig13_secondary,
+                   fig14_tpcc, fig15_tuner_ycsb, fig16_tuner_accuracy,
+                   fig17_tuner_responsiveness, kv_serving]
     print("name,value,derived")
     for mod in modules:
         t0 = time.time()
-        for row in mod.run(full=full):
+        for row in (mod.run(full=False, smoke=True) if smoke
+                    else mod.run(full=full)):
             print(row)
         print(f"# {mod.__name__}: {time.time() - t0:.1f}s", file=sys.stderr)
 

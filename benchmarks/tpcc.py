@@ -46,7 +46,7 @@ class TPCC:
             self._oid[table] += n
         else:
             ks = self._k(table, n)
-        self.store.write(table, ks, ks, op=False)
+        self.store.write_batch(table, ks, ks, op=False)
 
     def new_order(self):
         self._read("warehouse"); self._read("district")

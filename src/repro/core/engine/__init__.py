@@ -12,5 +12,7 @@ its jax/kernel imports until first instantiation.
 from .backend import (ENV_VAR, ExecutionBackend,  # noqa: F401
                       available_backends, bloom_sizing, get_backend,
                       next_pow2, register_backend)
-from .numpy_backend import NumpyBackend, merge_runs_numpy  # noqa: F401
+from .numpy_backend import (NumpyBackend, ingest_order,  # noqa: F401
+                            merge_runs_numpy)
 from .pallas_backend import PallasBackend  # noqa: F401
+from .scheduler import MaintenanceScheduler, TickReport  # noqa: F401

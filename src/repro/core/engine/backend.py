@@ -1,8 +1,9 @@
 """Execution-backend interface for the LSM engine's hot loops.
 
-A backend supplies the engine's four data-parallel primitives:
+A backend supplies the engine's five data-parallel primitives:
 
   * ``merge_runs(runs)``     -- k-way newest-wins merge (compaction)
+  * ``ingest_run(keys, vals)`` -- sort+dedup of one write batch (ingest)
   * ``bloom_build(keys)``    -- per-SSTable Bloom filter construction
   * ``bloom_probe(f, keys)`` -- batched membership probes
   * ``lookup_batch(sorted_keys, queries)`` -- batched binary search in a run
@@ -53,6 +54,18 @@ class ExecutionBackend:
         sorted unique run with newest-wins reconciliation.
 
         Returns (keys, vals) as int64 numpy arrays.
+        """
+        raise NotImplementedError
+
+    def ingest_run(self, keys, vals):
+        """Sort an *unsorted* write batch into one sorted unique run with
+        last-occurrence-wins dedup (the write-ingest mirror of
+        ``merge_runs``).
+
+        Returns (keys, vals, src) as int64 numpy arrays: the sorted unique
+        keys, the value of each key's newest occurrence, and ``src`` -- the
+        original batch position of that occurrence (callers derive exact
+        per-entry LSNs from it).
         """
         raise NotImplementedError
 

@@ -39,6 +39,18 @@ def merge_runs_numpy(runs):
     return keys[keep], vals[keep]
 
 
+def ingest_order(keys) -> np.ndarray:
+    """Canonical ingest ordering of a write batch: positions sorted by key,
+    newest (highest batch position) first among equal keys.
+
+    Shared by both backends so the pre-kernel ordering -- and therefore
+    which duplicate survives -- is identical everywhere.
+    """
+    n = len(keys)
+    rev = np.argsort(keys[::-1], kind="stable")
+    return (n - 1) - rev
+
+
 def _bloom_slots(keys, n_slots: int, k_hashes: int) -> np.ndarray:
     """[K, k] slot indices; int32 wraparound arithmetic matches the jnp
     oracle in kernels/bloom/ref.py."""
@@ -58,6 +70,19 @@ class NumpyBackend(ExecutionBackend):
 
     def merge_runs(self, runs):
         return merge_runs_numpy(runs)
+
+    def ingest_run(self, keys, vals):
+        keys = np.asarray(keys, np.int64)
+        vals = np.asarray(vals, np.int64)
+        n = len(keys)
+        if n == 0:
+            return keys, vals, np.empty(0, np.int64)
+        src = ingest_order(keys)
+        ks = keys[src]
+        keep = np.ones(n, bool)
+        keep[1:] = ks[1:] != ks[:-1]        # newest-first: keep the first
+        src = src[keep]
+        return ks[keep], vals[src], src
 
     def bloom_build(self, keys):
         # Membership bits only (bool, not counts): filters are cached per

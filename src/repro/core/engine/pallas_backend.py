@@ -18,7 +18,7 @@ import numpy as np
 
 from .backend import (BLOOM_K_HASHES, ExecutionBackend, bloom_sizing,
                       next_pow2, register_backend)
-from .numpy_backend import NumpyBackend
+from .numpy_backend import NumpyBackend, ingest_order
 
 _INT32_MAX = 2**31 - 1
 
@@ -74,6 +74,32 @@ class PallasBackend(ExecutionBackend):
         keys, vals = self._merge_ops.merge_runs_device(
             runs, tile=self.merge_tile, interpret=self.interpret)
         return keys.astype(np.int64), vals.astype(np.int64)
+
+    # -- write ingest --------------------------------------------------------
+    def ingest_run(self, keys, vals):
+        """Batch sort+dedup through the tile-merge kernel.
+
+        The canonical ingest ordering (shared with the numpy reference) is
+        computed on the host; the kernel then merges the two sorted halves
+        of the ordered batch, carrying batch *positions* through its value
+        channel -- values and LSNs are gathered host-side from the
+        surviving positions, so arbitrarily wide payloads ride a fixed
+        int32 kernel.
+        """
+        keys = np.asarray(keys, np.int64)
+        vals = np.asarray(vals, np.int64)
+        n = len(keys)
+        if n < 2:
+            return self._fallback.ingest_run(keys, vals)
+        if not _int32_safe_keys([keys]):
+            self.fallback_calls += 1
+            return self._fallback.ingest_run(keys, vals)
+        order = ingest_order(keys)
+        ks, src = self._merge_ops.ingest_run(
+            keys[order].astype(np.int32), order.astype(np.int32),
+            tile=self.merge_tile, interpret=self.interpret)
+        src = src.astype(np.int64)
+        return ks.astype(np.int64), vals[src], src
 
     # -- bloom ---------------------------------------------------------------
     def bloom_build(self, keys):

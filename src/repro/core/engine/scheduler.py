@@ -1,0 +1,233 @@
+"""Cross-tree maintenance scheduler: the single owner of flush/merge work.
+
+The paper's architecture (§3-§4) requires flushes and merges to be
+arbitrated *across* all LSM-trees sharing the write memory, not run inline
+by whichever tree happened to receive a write. ``MaintenanceScheduler``
+replaces the store's per-write inline enforcement: the write path only
+appends to memory components and then calls ``tick()``, and every flush or
+merge anywhere in the store flows through this class.
+
+A tick runs four phases:
+
+  1. **Memory-component upkeep** -- structures that do write-path-adjacent
+     work (Accordion's seal + pipeline merges, which can set
+     ``request_flush`` when a data merge's transient peak blows the
+     budget) run their ``upkeep_step`` units.
+  2. **Memory enforcement** (mandatory) -- static-scheme LRU dataset
+     evictions queued by the write path are flushed first; then, while
+     the shared write memory exceeds its threshold, pick a flush victim
+     by the configured §4.2 flush policy (max-memory / min-LSN /
+     write-rate-proportional OPT) and flush it. Runs to completion: the
+     memory bound is a correctness invariant, not discretionary work.
+  3. **Log enforcement** (mandatory) -- while the log exceeds its cap,
+     flush the tree holding the minimum LSN (log-triggered flushes
+     facilitate truncation, §4.1.1).
+  4. **Merge pass** (discretionary, budgeted) -- rank all trees by their
+     ``merge_debt`` (pending memory merges + L0 groups over target +
+     over-full levels + L1 drains) and execute up to ``merge_budget``
+     maintenance steps, always against the tree with the largest debt.
+     Unspent debt carries to the next tick (``carried_debt``), modelling
+     bounded background-merge bandwidth; ``merge_budget=None`` (default)
+     drains all debt every tick.
+
+The scheduler holds no tree state of its own -- it reads candidates from
+the store each phase -- so ticks are a pure function of store state, which
+the differential test suite exploits: any interleaving of writes producing
+the same memory-component state followed by the same tick sequence yields
+bit-identical trees.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+_INF = 2**62
+_UNSET = object()      # tick(): "no override" vs an explicit None (=drain)
+
+
+@dataclass
+class TickReport:
+    """What one scheduler tick did (returned by ``tick``)."""
+
+    flushes: int = 0          # flush events executed (mem- or log-triggered)
+    upkeep_steps: int = 0     # memory-component upkeep units
+    merge_steps: int = 0      # discretionary maintenance units
+    carried_debt: int = 0     # debt left unserved by the merge budget
+
+
+class MaintenanceScheduler:
+    """Arbitrates flush/merge work across every tree of one ``LSMStore``."""
+
+    def __init__(self, store, *, merge_budget: int | None = None):
+        self.store = store
+        self.merge_budget = merge_budget
+        self.ticks = 0
+        self.carried_debt = 0
+
+    # -- flush candidate ranking (§4.2) --------------------------------------
+    def pick_flush_tree(self):
+        """Rank non-empty trees by the configured flush policy and return
+        the victim (None if all memory components are empty)."""
+        s = self.store
+        nonempty = [t for t in s.trees.values() if not t.mem.is_empty()]
+        if not nonempty:
+            return None
+        pol = s.cfg.flush_policy
+        if pol == "mem":
+            return max(nonempty, key=lambda t: t.mem_bytes)
+        if pol == "lsn":
+            return min(nonempty, key=lambda t: t.min_lsn)
+        # opt: flush the tree whose memory ratio most exceeds its optimal
+        # write-rate-proportional ratio a_i_opt = r_i / sum_j r_j.
+        rates = {t.name: sum(b for _, b in s._rate_win[t.name])
+                 for t in nonempty}
+        total_rate = sum(rates.values())
+        used = {t.name: t.mem_bytes for t in nonempty}
+        total_used = sum(used.values())
+        if total_rate == 0 or total_used == 0:
+            return min(nonempty, key=lambda t: t.min_lsn)
+        best, best_gap = None, None
+        for t in nonempty:
+            a = used[t.name] / total_used
+            a_opt = rates[t.name] / total_rate
+            gap = a - a_opt
+            if best_gap is None or gap > best_gap:
+                best, best_gap = t, gap
+        return best
+
+    # -- flush execution ------------------------------------------------------
+    def flush_tree(self, tree, *, trigger: str,
+                   forced_kind: str | None = None) -> int:
+        """Flush one tree. Returns bytes freed.
+
+        Only the cheap level bookkeeping settles here; the merge work the
+        flush induces (L0 merges, level merges) accrues as merge debt and
+        is served by the budgeted merge pass."""
+        s = self.store
+        s._pre_flush_sample(tree)
+        freed = tree.flush(trigger=trigger, log_pos=s.log_pos,
+                           max_log_bytes=s.cfg.max_log_bytes,
+                           total_write_mem=s.write_memory_bytes,
+                           beta=s.cfg.beta, forced_kind=forced_kind)
+        tree.levels.adjust(s._tree_share(tree))
+        return freed
+
+    def flush_dataset(self, ds: str, *, trigger: str) -> int:
+        """Flush every tree of one dataset (static-scheme quota/eviction)."""
+        freed = 0
+        for name in self.store.datasets[ds]:
+            t = self.store.trees[name]
+            if not t.mem.is_empty():
+                freed += self.flush_tree(t, trigger=trigger)
+        return freed
+
+    # -- tick phases ----------------------------------------------------------
+    def _mem_upkeep(self) -> int:
+        steps = 0
+        for t in self.store.trees.values():
+            while steps < 10_000 and t.mem.upkeep_step():
+                steps += 1
+        return steps
+
+    def _enforce_memory(self) -> int:
+        s, cfg = self.store, self.store.cfg
+        flushes = 0
+        if cfg.scheme.startswith("btree-static"):
+            # per-dataset quota = write_mem / D; full flush at quota
+            D = cfg.max_active_datasets
+            quota = s.write_memory_bytes / max(1, D)
+            for ds, names in s.datasets.items():
+                used = sum(s.trees[n].mem_bytes for n in names)
+                if used >= quota:
+                    self.flush_dataset(ds, trigger="mem")
+                    flushes += 1
+            return flushes
+        # shared-pool schemes
+        budget = cfg.mem_flush_threshold * s.write_memory_bytes
+        # Accordion-data: a big in-memory merge may blow the budget
+        for t in s.trees.values():
+            m = t.mem
+            if hasattr(m, "budget_hint_bytes"):
+                m.budget_hint_bytes = int(budget)
+            if getattr(m, "request_flush", False):
+                self.flush_tree(t, trigger="mem")
+                m.request_flush = False
+                flushes += 1
+        guard = 0
+        while s.write_memory_used() > budget and guard < 1000:
+            guard += 1
+            t = self.pick_flush_tree()
+            if t is None:
+                break
+            freed = self.flush_tree(t, trigger="mem",
+                                    forced_kind=cfg.forced_flush_kind)
+            flushes += 1
+            if freed == 0:
+                break
+        return flushes
+
+    def _enforce_log(self) -> int:
+        s, cfg = self.store, self.store.cfg
+        flushes = 0
+        guard = 0
+        while s.log_length > cfg.mem_flush_threshold * cfg.max_log_bytes \
+                and guard < 1000:
+            guard += 1
+            if s.min_lsn() >= _INF:
+                break
+            tree = min((t for t in s.trees.values()
+                        if not t.mem.is_empty() or t.min_lsn < _INF),
+                       key=lambda t: t.min_lsn, default=None)
+            if tree is None or tree.mem.is_empty():
+                break
+            freed = self.flush_tree(tree, trigger="log",
+                                    forced_kind=cfg.forced_flush_kind)
+            flushes += 1
+            if freed == 0:
+                break
+        return flushes
+
+    def _run_merges(self, budget: int | None) -> int:
+        """Serve maintenance units to the tree with the largest merge debt
+        until the budget (or all debt) is exhausted.
+
+        Debts are cached per tree and re-evaluated only for the tree just
+        served: maintenance of one tree never changes another tree's
+        structures or share, so the cached ranking stays exact."""
+        s = self.store
+        steps = 0
+        debts = {t.name: t.merge_debt(s._tree_share(t))
+                 for t in s.trees.values()}
+        guard = 0
+        while guard < 20_000 and (budget is None or steps < budget):
+            guard += 1
+            name = max(debts, key=debts.__getitem__, default=None)
+            if name is None or debts[name] <= 0:
+                break
+            t = s.trees[name]
+            if t.maintenance_step(s._tree_share(t)):
+                steps += 1
+                debts[name] = t.merge_debt(s._tree_share(t))
+            else:
+                # debt signal was stale (e.g. cleared by levels.adjust)
+                debts[name] = 0
+        self.carried_debt = sum(debts.values())
+        return steps
+
+    # -- the tick --------------------------------------------------------------
+    def tick(self, *, merge_budget=_UNSET) -> TickReport:
+        """One maintenance round over the whole store. ``merge_budget``
+        overrides the scheduler's default for this tick only; pass an
+        explicit ``None`` to drain all debt regardless of the default."""
+        self.ticks += 1
+        rep = TickReport()
+        rep.upkeep_steps = self._mem_upkeep()
+        while self.store._pending_evict:     # static-scheme LRU evictions
+            self.flush_dataset(self.store._pending_evict.pop(0),
+                               trigger="mem")
+            rep.flushes += 1
+        rep.flushes += self._enforce_memory()
+        rep.flushes += self._enforce_log()
+        budget = self.merge_budget if merge_budget is _UNSET else merge_budget
+        rep.merge_steps = self._run_merges(budget)
+        rep.carried_debt = self.carried_debt
+        return rep

@@ -15,7 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..engine import get_backend
-from .memtable import MemComponentBase, MemStats
+from .memtable import MemComponentBase, MemStats, _slice_run
 
 _INF = 2**62
 
@@ -23,8 +23,9 @@ _INF = 2**62
 class BTreeMemComponent(MemComponentBase):
     B_TREE_UTILIZATION = 2.0 / 3.0
 
-    def __init__(self, *, entry_bytes: int, **_):
+    def __init__(self, *, entry_bytes: int, backend=None, **_):
         self.entry_bytes = entry_bytes
+        self.backend = backend or get_backend()
         self.data: dict = {}
         self.lsn_min_: int = _INF
         self.lsn_max_: int = 0
@@ -35,7 +36,19 @@ class BTreeMemComponent(MemComponentBase):
         for i, k in enumerate(keys):
             d[int(k)] = int(vals[i])
         self.lsn_min_ = min(self.lsn_min_, lsn0)
-        self.lsn_max_ = max(self.lsn_max_, lsn0 + len(keys))
+        self.lsn_max_ = max(self.lsn_max_, lsn0 + len(keys) * self.entry_bytes)
+
+    def ingest_batch(self, keys, vals, lsn0: int) -> None:
+        # A dict is already last-occurrence-wins and _seal sorts at flush
+        # time, so a bulk update of the raw batch is bit-identical to a
+        # backend sort+dedup -- no kernel call needed here.
+        n = len(keys)
+        if n == 0:
+            return
+        self.data.update(zip(np.asarray(keys, np.int64).tolist(),
+                             np.asarray(vals, np.int64).tolist()))
+        self.lsn_min_ = min(self.lsn_min_, lsn0)
+        self.lsn_max_ = max(self.lsn_max_, lsn0 + n * self.entry_bytes)
 
     @property
     def used_bytes(self) -> int:
@@ -78,12 +91,6 @@ class BTreeMemComponent(MemComponentBase):
         return [(ks, vs)]
 
 
-def _slice_run(keys, vals, lo, hi):
-    i = int(np.searchsorted(keys, lo))
-    j = int(np.searchsorted(keys, hi, side="right"))
-    return (keys[i:j], vals[i:j]) if j > i else None
-
-
 class AccordionMemComponent(MemComponentBase):
     INDEX_ENTRY_BYTES = 16           # key + offset in the value log
 
@@ -105,13 +112,36 @@ class AccordionMemComponent(MemComponentBase):
 
     # -- write path ------------------------------------------------------------
     def write(self, keys, vals, lsn0: int) -> None:
+        # Seal + pipeline merges are *not* inline: the maintenance
+        # scheduler drives them through ``upkeep_step`` at tick time.
         a = self.active
         for i, k in enumerate(keys):
             a[int(k)] = int(vals[i])
         self.lsn_min_ = min(self.lsn_min_, lsn0)
-        self.lsn_max_ = max(self.lsn_max_, lsn0 + len(keys))
-        if len(self.active) * self.entry_bytes >= self.active_bytes_max:
+        self.lsn_max_ = max(self.lsn_max_, lsn0 + len(keys) * self.entry_bytes)
+
+    def ingest_batch(self, keys, vals, lsn0: int) -> None:
+        # As in BTreeMemComponent: the active dict is last-wins and _seal
+        # sorts, so a bulk update beats a backend sort+dedup round-trip.
+        n = len(keys)
+        if n == 0:
+            return
+        self.active.update(zip(np.asarray(keys, np.int64).tolist(),
+                               np.asarray(vals, np.int64).tolist()))
+        self.lsn_min_ = min(self.lsn_min_, lsn0)
+        self.lsn_max_ = max(self.lsn_max_, lsn0 + n * self.entry_bytes)
+
+    def over_active_limit(self) -> bool:
+        return len(self.active) * self.entry_bytes >= self.active_bytes_max
+
+    def upkeep_step(self) -> bool:
+        if self.over_active_limit():
             self._seal()
+            return True
+        if len(self.segments) > self.pipeline_threshold:
+            self._merge_pipeline()
+            return True
+        return False
 
     def _seal(self) -> None:
         if not self.active:
@@ -124,11 +154,8 @@ class AccordionMemComponent(MemComponentBase):
         self.segments.append((keys, vals, raw, self.lsn_min_, self.lsn_max_))
         self.stats.entries_sealed += len(keys)
         self.active = {}
-        self.maintain()
 
-    def maintain(self) -> None:
-        if len(self.segments) <= self.pipeline_threshold:
-            return
+    def _merge_pipeline(self) -> None:
         runs = [(s[0], s[1]) for s in reversed(self.segments)]  # newest first
         keys, vals = self.backend.merge_runs(runs)
         self.stats.entries_merged += sum(len(r[0]) for r in runs)

@@ -30,10 +30,29 @@ class MemStats:
 
 
 class MemComponentBase:
-    """Interface shared by all memory-component structures."""
+    """Interface shared by all memory-component structures.
+
+    LSNs are *log byte offsets*: entry ``i`` of a batch written at log
+    position ``lsn0`` carries LSN ``lsn0 + i * entry_bytes``, so one batch
+    of n entries is indistinguishable from n batches of one (the
+    differential suite relies on this).
+    """
 
     def write(self, keys, vals, lsn0):
         raise NotImplementedError
+
+    def ingest_batch(self, keys, vals, lsn0):
+        """Batched write: semantics identical to ``write`` entry-by-entry
+        (last occurrence of a duplicated key wins, with its own LSN).
+        Structures override this to vectorize; the default defers to the
+        scalar path."""
+        self.write(keys, vals, lsn0)
+
+    def upkeep_step(self) -> bool:
+        """One unit of write-path upkeep that the maintenance scheduler
+        runs *before* flush enforcement (e.g. Accordion's seal + pipeline
+        merge). Returns True if work was done."""
+        return False
 
     @property
     def used_bytes(self) -> int:
@@ -45,6 +64,11 @@ class MemComponentBase:
         raise NotImplementedError
 
     def lookup(self, key: int):
+        raise NotImplementedError
+
+    def scan_runs(self, lo: int, hi: int):
+        """Sorted (keys, vals) runs sliced to [lo, hi] inclusive, newest
+        first."""
         raise NotImplementedError
 
     def lookup_batch(self, keys):
@@ -65,6 +89,14 @@ class MemComponentBase:
 
     def is_empty(self) -> bool:
         raise NotImplementedError
+
+
+def _slice_run(keys, vals, lo, hi):
+    """Slice a sorted (keys, vals) run to [lo, hi] inclusive; None if the
+    slice is empty."""
+    i = int(np.searchsorted(keys, lo))
+    j = int(np.searchsorted(keys, hi, side="right"))
+    return (keys[i:j], vals[i:j]) if j > i else None
 
 
 def _insert_disjoint(level, ssts):
@@ -129,8 +161,24 @@ class PartitionedMemComponent(MemComponentBase):
         if self.active_lsn_min is None:
             self.active_lsn_min = lsn0
         a = self.active
+        e = self.entry_bytes
         for i, k in enumerate(keys):
-            a[int(k)] = (int(vals[i]), lsn0 + i)
+            a[int(k)] = (int(vals[i]), lsn0 + i * e)
+
+    def ingest_batch(self, keys, vals, lsn0: int) -> None:
+        """Vectorized write: one backend sort+dedup call per batch, then a
+        single bulk dict update -- bit-identical active state to the
+        scalar loop."""
+        n = len(keys)
+        if n == 0:
+            return
+        if self.active_lsn_min is None:
+            self.active_lsn_min = lsn0
+        ks, vs, src = self.backend.ingest_run(
+            np.asarray(keys, np.int64), np.asarray(vals, np.int64))
+        lsns = lsn0 + src * self.entry_bytes
+        self.active.update(
+            zip(ks.tolist(), zip(vs.tolist(), lsns.tolist())))
 
     def over_active_limit(self) -> bool:
         return self.active_bytes >= self.active_bytes_max
@@ -173,24 +221,36 @@ class PartitionedMemComponent(MemComponentBase):
                              self.page_bytes, self.active_bytes_max)
         _insert_disjoint(lvl, outs)
 
-    def maintain(self) -> None:
-        """Run memory merges until every level respects its max size (§4.1.1:
-        greedy min-overlap-ratio victim selection)."""
-        changed = True
-        while changed:
-            changed = False
-            for li in range(len(self.levels)):
-                lvl = self.levels[li]
-                if sum(s.size_bytes for s in lvl) > self.level_max_bytes(li):
-                    # Over-full: greedily push one SSTable down (growing the
-                    # structure with a new last level when needed).
-                    victim = self._greedy_victim(li)
-                    lvl.remove(victim)
-                    self._merge_into_level(li + 1, [victim])
-                    changed = True
+    def maintain_step(self) -> bool:
+        """One memory-merge unit (§4.1.1: greedy min-overlap-ratio victim
+        pushed down from the shallowest over-full level; a new last level
+        grows when needed). Returns True if a merge ran; once every level
+        respects its max size, drops empty trailing levels and returns
+        False."""
+        for li in range(len(self.levels)):
+            lvl = self.levels[li]
+            if sum(s.size_bytes for s in lvl) > self.level_max_bytes(li):
+                victim = self._greedy_victim(li)
+                lvl.remove(victim)
+                self._merge_into_level(li + 1, [victim])
+                return True
         # Drop empty trailing levels so flush targets the true last level.
         while self.levels and not self.levels[-1]:
             self.levels.pop()
+        return False
+
+    def maintain(self) -> None:
+        """Run memory merges until every level respects its max size."""
+        guard = 0
+        while guard < 10_000 and self.maintain_step():
+            guard += 1
+
+    def merge_debt(self) -> int:
+        """Pending memory-merge units (scheduler ranking signal)."""
+        debt = 1 if self.over_active_limit() else 0
+        return debt + sum(
+            1 for li, lvl in enumerate(self.levels)
+            if sum(s.size_bytes for s in lvl) > self.level_max_bytes(li))
 
     def _greedy_victim(self, li: int) -> SSTable:
         """Pick the SSTable at level li minimizing the overlapping ratio with
@@ -304,7 +364,8 @@ class PartitionedMemComponent(MemComponentBase):
         return found, vals
 
     def scan_runs(self, lo: int, hi: int):
-        """All in-memory (keys, vals) runs overlapping [lo,hi], newest first."""
+        """All in-memory (keys, vals) runs *sliced to* [lo,hi], newest
+        first."""
         out = []
         if self.active:
             ks = np.array([k for k in self.active if lo <= k <= hi], np.int64)
@@ -314,5 +375,8 @@ class PartitionedMemComponent(MemComponentBase):
                 out.append((ks, vs))
         for lvl in self.levels:                  # newest level first
             i, j = _overlap_slice(lvl, lo, hi)
-            out.extend((s.keys, s.vals) for s in lvl[i:j])
+            for s in lvl[i:j]:
+                r = _slice_run(s.keys, s.vals, lo, hi)
+                if r is not None:
+                    out.append(r)
         return out

@@ -16,6 +16,12 @@ import numpy as np
 
 _SST_IDS = itertools.count()
 
+# Reserved payload marking a deleted key. Deletes are writes of this value:
+# newest-wins reconciliation carries the tombstone down the tree shadowing
+# older versions; reads and scans filter it out. Chosen inside the Pallas
+# kernels' int32 value domain so deletes never force a numpy fallback.
+TOMBSTONE = -(2**31) + 1
+
 
 def reset_sst_ids() -> None:
     """Reset the global SSTable id counter (tests/benchmarks isolation)."""

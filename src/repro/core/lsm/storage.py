@@ -21,10 +21,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..engine import available_backends, get_backend
+from ..engine.scheduler import MaintenanceScheduler
 from ..tuner.simcache import GhostCache
 from .baselines import AccordionMemComponent, BTreeMemComponent
 from .cache import ClockCache, Disk
 from .memtable import PartitionedMemComponent
+from .sstable import TOMBSTONE
 from .tree import LSMTree
 
 _INF = 2**62
@@ -96,6 +98,10 @@ class StoreConfig:
     # Execution backend for merges/Bloom/batched lookups ("numpy" |
     # "pallas"); None defers to the REPRO_LSM_BACKEND env var, then "numpy".
     backend: str | None = None
+    # Max discretionary maintenance units per scheduler tick (None = drain
+    # all merge debt every tick). Mandatory memory/log enforcement is never
+    # budgeted.
+    merge_budget: int | None = None
     time_model: TimeModel = field(default_factory=TimeModel)
 
     def validate(self):
@@ -126,9 +132,14 @@ class LSMStore:
         self.log_pos = 0                        # byte offset
         # per-tree write-rate windows for the OPT policy (§4.2)
         self._rate_win: dict[str, deque] = {}
-        # LRU order of active datasets for the static schemes
+        # LRU order of active datasets for the static schemes; evicted
+        # datasets queue here and are flushed by the scheduler tick
         self._active_ds: list[str] = []
+        self._pending_evict: list[str] = []
         self._share_ewma: dict[str, float] = {}
+        # Sole owner of flush/merge work: the write path appends and ticks.
+        self.scheduler = MaintenanceScheduler(
+            self, merge_budget=cfg.merge_budget)
 
     # -- schema ------------------------------------------------------------------
     def create_tree(self, name: str, *, dataset: str | None = None,
@@ -188,25 +199,60 @@ class LSMStore:
         self.cache.resize(pages)
 
     # -- write path ------------------------------------------------------------------
-    def write(self, tree_name: str, keys, vals=None, *, op: bool = True) -> None:
+    def _ingest(self, tree_name: str, keys, vals, *, op: bool,
+                tick: bool) -> None:
         tree = self.trees[tree_name]
-        keys = np.asarray(keys, np.int64)
-        if vals is None:
-            vals = keys  # payload checksum defaults to the key
         lsn0 = self.log_pos
-        tree.write_batch(keys, np.asarray(vals, np.int64), lsn0)
+        tree.write_batch(keys, vals, lsn0)
         nbytes = len(keys) * tree.entry_bytes
         self.log_pos += nbytes
         self.disk.stats.entries_written += len(keys)
         if op:
-            self.disk.stats.ops += 1
+            self.disk.stats.ops += len(keys)
         win = self._rate_win[tree_name]
         win.append((lsn0, nbytes))
         self._trim_rate_windows()
         self._dataset_touch(tree_name)
-        self._enforce_memory()
-        self._enforce_log()
-        self._maintain(tree)
+        if tick:
+            self.scheduler.tick()
+
+    def write_batch(self, tree_name: str, keys, vals=None, *, op: bool = True,
+                    tick: bool = True) -> None:
+        """Batched writes: one logical op per key, ingested through the
+        tree's execution backend (vectorized sort+dedup), then one
+        maintenance-scheduler tick. No flush or merge runs inline here.
+
+        ``tick=False`` defers all maintenance; callers then drive
+        ``self.scheduler.tick()`` explicitly (differential tests, drivers
+        that amortize one tick over several batches).
+        """
+        keys = np.asarray(keys, np.int64)
+        if vals is None:
+            vals = keys  # payload checksum defaults to the key
+        vals = np.asarray(vals, np.int64)
+        # the tombstone payload is reserved for delete_batch -- accepting
+        # it here would make a legitimate write behave as a silent delete
+        if (vals == TOMBSTONE).any():
+            raise ValueError(
+                f"payload {TOMBSTONE} is reserved for deletes; "
+                f"use delete_batch")
+        self._ingest(tree_name, keys, vals, op=op, tick=tick)
+
+    def write(self, tree_name: str, keys, vals=None, *, op: bool = True) -> None:
+        """Legacy entry point: a write_batch counted as ONE logical op per
+        call (scalar semantics), whatever the array length."""
+        self.write_batch(tree_name, keys, vals, op=False)
+        if op:
+            self.disk.stats.ops += 1
+
+    def delete_batch(self, tree_name: str, keys, *, op: bool = True,
+                     tick: bool = True) -> None:
+        """Batched deletes: tombstone writes (newest-wins reconciliation
+        shadows older versions; reads and scans filter them)."""
+        keys = np.asarray(keys, np.int64)
+        self._ingest(tree_name, keys,
+                     np.full(len(keys), TOMBSTONE, np.int64),
+                     op=op, tick=tick)
 
     def note_ops(self, n: int = 1) -> None:
         self.disk.stats.ops += n
@@ -222,30 +268,22 @@ class LSMStore:
         if not self.cfg.scheme.startswith("btree-static"):
             return
         ds = self.tree_dataset[tree_name]
+        if ds in self._pending_evict:
+            # re-activated before the tick flushed it: never flush an
+            # active dataset
+            self._pending_evict.remove(ds)
         if ds in self._active_ds:
             self._active_ds.remove(ds)
             self._active_ds.append(ds)
             return
         D = self.cfg.max_active_datasets
         if len(self._active_ds) >= D:
-            victim = self._active_ds.pop(0)     # evict LRU dataset: flush all
-            self._flush_dataset(victim, trigger="mem")
+            # evict LRU dataset: the scheduler tick flushes it (nothing
+            # flushes inline in the write path, even under tick=False)
+            self._pending_evict.append(self._active_ds.pop(0))
         self._active_ds.append(ds)
 
-    def _flush_dataset(self, ds: str, *, trigger: str) -> int:
-        freed = 0
-        for name in self.datasets[ds]:
-            t = self.trees[name]
-            if not t.mem.is_empty():
-                self._pre_flush_sample(t)
-                freed += t.flush(trigger=trigger, log_pos=self.log_pos,
-                                 max_log_bytes=self.cfg.max_log_bytes,
-                                 total_write_mem=self.write_memory_bytes,
-                                 beta=self.cfg.beta)
-                self._maintain(t)
-        return freed
-
-    # -- flush triggers -------------------------------------------------------------------
+    # -- flush bookkeeping (read by the scheduler) --------------------------------------
     def _pre_flush_sample(self, tree: LSMTree) -> None:
         e = self._share_ewma[tree.name]
         self._share_ewma[tree.name] = 0.7 * e + 0.3 * tree.mem_bytes
@@ -254,102 +292,9 @@ class LSMStore:
         return max(self._share_ewma[tree.name], tree.mem_bytes,
                    self.cfg.active_sstable_bytes)
 
-    def _enforce_memory(self) -> None:
-        cfg = self.cfg
-        if cfg.scheme.startswith("btree-static"):
-            # per-dataset quota = write_mem / D; full flush at quota
-            D = cfg.max_active_datasets
-            quota = self.write_memory_bytes / max(1, D)
-            for ds, names in self.datasets.items():
-                used = sum(self.trees[n].mem_bytes for n in names)
-                if used >= quota:
-                    self._flush_dataset(ds, trigger="mem")
-            return
-        # shared-pool schemes
-        budget = cfg.mem_flush_threshold * self.write_memory_bytes
-        # Accordion-data: a big in-memory merge may blow the budget
-        for t in self.trees.values():
-            m = t.mem
-            if isinstance(m, AccordionMemComponent):
-                m.budget_hint_bytes = int(budget)
-                if m.request_flush:
-                    self._pre_flush_sample(t)
-                    t.flush(trigger="mem", log_pos=self.log_pos,
-                            max_log_bytes=cfg.max_log_bytes,
-                            total_write_mem=self.write_memory_bytes,
-                            beta=cfg.beta)
-                    m.request_flush = False
-                    self._maintain(t)
-        guard = 0
-        while self.write_memory_used() > budget and guard < 1000:
-            guard += 1
-            t = self._pick_flush_tree()
-            if t is None:
-                break
-            self._pre_flush_sample(t)
-            freed = t.flush(trigger="mem", log_pos=self.log_pos,
-                            max_log_bytes=cfg.max_log_bytes,
-                            total_write_mem=self.write_memory_bytes,
-                            beta=cfg.beta,
-                            forced_kind=cfg.forced_flush_kind)
-            self._maintain(t)
-            if freed == 0:
-                break
-
     def _pick_flush_tree(self) -> LSMTree | None:
-        """§4.2 flush policies."""
-        nonempty = [t for t in self.trees.values() if not t.mem.is_empty()]
-        if not nonempty:
-            return None
-        pol = self.cfg.flush_policy
-        if pol == "mem":
-            return max(nonempty, key=lambda t: t.mem_bytes)
-        if pol == "lsn":
-            return min(nonempty, key=lambda t: t.min_lsn)
-        # opt: flush the tree whose memory ratio most exceeds its optimal
-        # write-rate-proportional ratio a_i_opt = r_i / sum_j r_j.
-        rates = {t.name: sum(b for _, b in self._rate_win[t.name])
-                 for t in nonempty}
-        total_rate = sum(rates.values())
-        used = {t.name: t.mem_bytes for t in nonempty}
-        total_used = sum(used.values())
-        if total_rate == 0 or total_used == 0:
-            return min(nonempty, key=lambda t: t.min_lsn)
-        best, best_gap = None, None
-        for t in nonempty:
-            a = used[t.name] / total_used
-            a_opt = rates[t.name] / total_rate
-            gap = a - a_opt
-            if best_gap is None or gap > best_gap:
-                best, best_gap = t, gap
-        return best
-
-    def _enforce_log(self) -> None:
-        cfg = self.cfg
-        guard = 0
-        while self.log_length > cfg.mem_flush_threshold * cfg.max_log_bytes \
-                and guard < 1000:
-            guard += 1
-            m = self.min_lsn()
-            if m >= _INF:
-                break
-            tree = min((t for t in self.trees.values()
-                        if not t.mem.is_empty() or t.min_lsn < _INF),
-                       key=lambda t: t.min_lsn, default=None)
-            if tree is None or tree.mem.is_empty():
-                break
-            self._pre_flush_sample(tree)
-            freed = tree.flush(trigger="log", log_pos=self.log_pos,
-                               max_log_bytes=cfg.max_log_bytes,
-                               total_write_mem=self.write_memory_bytes,
-                               beta=cfg.beta,
-                               forced_kind=cfg.forced_flush_kind)
-            self._maintain(tree)
-            if freed == 0:
-                break
-
-    def _maintain(self, tree: LSMTree) -> None:
-        tree.maintain(self._tree_share(tree))
+        """§4.2 flush policies (delegates to the scheduler's ranking)."""
+        return self.scheduler.pick_flush_tree()
 
     # -- reads -----------------------------------------------------------------------
     def lookup(self, tree_name: str, key: int, *, op: bool = True):

@@ -19,7 +19,7 @@ from .cache import Disk
 from .grouped_l0 import FlatL0, GroupedL0
 from .levels import DiskLevels
 from .memtable import MemComponentBase, PartitionedMemComponent
-from .sstable import partition_run, probe_tier
+from .sstable import TOMBSTONE, partition_run, probe_tier
 
 
 @dataclass
@@ -87,8 +87,19 @@ class LSMTree:
 
     # -- write path -------------------------------------------------------------
     def write_batch(self, keys, vals, lsn0: int) -> None:
-        self.mem.write(keys, vals, lsn0)
+        """Batched ingest into the memory component (one backend sort+dedup
+        call); entry i carries LSN lsn0 + i*entry_bytes, so a batch of n is
+        indistinguishable from n scalar writes.
+
+        Batches of one take the component's scalar ``write`` path: that
+        keeps the reference loop alive, and the differential suite (which
+        replays every batch both ways) pins it bit-identical to
+        ``ingest_batch``."""
         n = len(keys)
+        if n == 1:
+            self.mem.write(keys, vals, lsn0)
+        else:
+            self.mem.ingest_batch(keys, vals, lsn0)
         self.stats.entries_written += n
         self.stats.bytes_written += n * self.entry_bytes
 
@@ -163,6 +174,18 @@ class LSMTree:
             self.stats.merge_pages_written += sst.num_pages + sst.bloom_pages()
         return outs
 
+    def _purge_tombstones_at_bottom(self, keys, vals, target: int):
+        """Drop TOMBSTONE entries when the merge output lands in the
+        bottommost level: no older version can exist below it, so the
+        tombstone has nothing left to shadow. Keeps delete-heavy
+        workloads from accumulating dead entries (and merge bandwidth)
+        forever."""
+        if target == self.levels.num_levels - 1:
+            live = vals != TOMBSTONE
+            if not live.all():
+                return keys[live], vals[live]
+        return keys, vals
+
     def merge_l0_once(self) -> bool:
         if self.l0.num_groups == 0:
             return False
@@ -192,6 +215,7 @@ class LSMTree:
         for t in read:
             self.disk.merge_read_sst(t)
         keys, vals = self.backend.merge_runs(runs)
+        keys, vals = self._purge_tombstones_at_bottom(keys, vals, ti)
         self.disk.stats.entries_merged_disk += sum(len(r[0]) for r in runs)
         lsn_min = min(t.lsn_min for t in read)
         lsn_max = max(t.lsn_max for t in read)
@@ -211,6 +235,7 @@ class LSMTree:
             self.disk.merge_read_sst(t)
         runs = [(victim.keys, victim.vals)] + [(t.keys, t.vals) for t in olds]
         keys, vals = self.backend.merge_runs(runs)
+        keys, vals = self._purge_tombstones_at_bottom(keys, vals, i + 1)
         self.disk.stats.entries_merged_disk += sum(len(r[0]) for r in runs)
         outs = self._merge_write_out(
             keys, vals, min(t.lsn_min for t in [victim] + olds),
@@ -220,34 +245,51 @@ class LSMTree:
         for t in [victim] + olds:
             self.disk.drop_sst(t)
 
-    def maintain(self, write_mem_share: float) -> None:
-        """Run merges until structural invariants hold (simulated background
-        threads: memory merges, L0 merges, level merges, L1-drain merges)."""
+    def _l0_needs_merge(self, write_mem_share: float) -> bool:
+        l0_bytes_budget = max(write_mem_share, 4 * self.sstable_bytes)
+        return (self.l0.num_groups >= max(2, self.l0_target_groups)
+                or self.l0.total_bytes > l0_bytes_budget)
+
+    def maintenance_step(self, write_mem_share: float) -> bool:
+        """One unit of maintenance work (simulated background threads, in
+        priority order: memory seal, memory merge, L0 merge, level merge,
+        L1-drain merge). Returns True if work was done; the scheduler's
+        per-tick budget counts these units."""
         if isinstance(self.mem, PartitionedMemComponent):
             if self.mem.over_active_limit():
                 self.mem.seal_active()
-            self.mem.maintain()
+                return True
+            if self.mem.maintain_step():
+                return True
         self.levels.adjust(write_mem_share)
-        l0_bytes_budget = max(write_mem_share, 4 * self.sstable_bytes)
-        guard = 0
-        while guard < 10_000:
-            guard += 1
-            if (self.l0.num_groups >= max(2, self.l0_target_groups)
-                    or self.l0.total_bytes > l0_bytes_budget):
-                if self.merge_l0_once():
-                    continue
-            over = self.levels.over_full()
-            if over:
-                self.merge_level_once(over[0])
-                continue
-            # low-priority drain of L1 while it is being deleted (§4.1.3)
-            if self.levels.deleting_l1 and self.levels.num_levels >= 2 \
-                    and self.levels.levels[0]:
-                self.merge_level_once(0)
-                self.levels.adjust(write_mem_share)
-                continue
-            break
-        self.levels.adjust(write_mem_share)
+        if self._l0_needs_merge(write_mem_share) and self.merge_l0_once():
+            return True
+        over = self.levels.over_full()
+        if over:
+            self.merge_level_once(over[0])
+            return True
+        # low-priority drain of L1 while it is being deleted (§4.1.3)
+        if self.levels.deleting_l1 and self.levels.num_levels >= 2 \
+                and self.levels.levels[0]:
+            self.merge_level_once(0)
+            self.levels.adjust(write_mem_share)
+            return True
+        return False
+
+    def merge_debt(self, write_mem_share: float) -> int:
+        """Pending maintenance units -- the scheduler's cross-tree ranking
+        signal. Zero iff ``maintenance_step`` would find no work (up to a
+        ``levels.adjust`` the step itself applies)."""
+        debt = 0
+        if isinstance(self.mem, PartitionedMemComponent):
+            debt += self.mem.merge_debt()
+        if self._l0_needs_merge(write_mem_share):
+            debt += self.l0.num_groups
+        debt += len(self.levels.over_full())
+        if self.levels.deleting_l1 and self.levels.num_levels >= 2 \
+                and self.levels.levels[0]:
+            debt += 1
+        return debt
 
     # -- reads ---------------------------------------------------------------
     def _bloom(self, sst):
@@ -289,6 +331,11 @@ class LSMTree:
                        self.backend.lookup_batch,
                        pre_probe=self._bloom_gate,
                        post_lookup=self._leaf_pins)
+        # A tombstone *resolves* its key (it shadows older versions, so
+        # probing stopped at it) but reads back as absent.
+        dead = found & (vals == TOMBSTONE)
+        found[dead] = False
+        vals[dead] = 0
         return found, vals
 
     def lookup(self, key: int):
@@ -302,15 +349,8 @@ class LSMTree:
         returns the number of live entries in the range."""
         self.stats.lookups += 1
         hi = lo + n_entries  # key-space width proxy (uniform key density)
-        runs = []
-        if hasattr(self.mem, "scan_runs"):
-            runs.extend(self.mem.scan_runs(lo, hi - 1))
-        else:  # monolithic baselines: probe the dict directly
-            ks = np.array([k for k in getattr(self.mem, "data", {})
-                           if lo <= k < hi], np.int64)
-            if len(ks):
-                ks.sort()
-                runs.append((ks, ks))
+        # every memory-component structure provides sliced scan runs
+        runs = list(self.mem.scan_runs(lo, hi - 1))
         for sst in (self.l0.tables_overlapping(lo, hi - 1)
                     + self.levels.tables_overlapping(lo, hi - 1)):
             i = int(np.searchsorted(sst.keys, lo))
@@ -323,5 +363,5 @@ class LSMTree:
             runs.append((sst.keys[i:j], sst.vals[i:j]))
         if not runs:
             return 0
-        keys, _ = self.backend.merge_runs(runs)
-        return int(len(keys))
+        keys, vals = self.backend.merge_runs(runs)
+        return int(np.count_nonzero(vals != TOMBSTONE))

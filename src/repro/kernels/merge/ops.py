@@ -111,6 +111,33 @@ def _pad_run(k, v, n):
     return k, v
 
 
+def ingest_run(keys, src, *, tile: int = 512, use_kernel: bool = True,
+               interpret: bool = True):
+    """Run-sized write-ingest entry point: dedup a pre-ordered write batch
+    through the tile-merge kernel.
+
+    ``keys`` (int32, >= 2 entries, in [0, INT_MAX)) is sorted ascending
+    with the newest occurrence of each key *first* among equals; ``src``
+    carries each entry's original batch position. The batch is split at
+    its midpoint into two sorted halves (any contiguous slice of a sorted
+    run is sorted) and merged by the Pallas kernel: run-A tie priority
+    plus the global keep-mask keep exactly the first -- i.e. newest --
+    occurrence of every key, whether its duplicates sit inside one half
+    or span the split. Operands are padded to power-of-two lengths with
+    INT_MAX sentinels (same size bucketing as the read path) so the jit
+    compiles once per batch-size bucket.
+
+    Returns dense int32 (unique_keys, surviving_src).
+    """
+    keys = np.asarray(keys, np.int32)
+    src = np.asarray(src, np.int32)
+    h = keys.shape[0] // 2
+    ka, va = _pad_run(keys[:h], src[:h], next_pow2(h))
+    kb, vb = _pad_run(keys[h:], src[h:], next_pow2(keys.shape[0] - h))
+    return merge_runs_dedup(ka, va, kb, vb, tile=tile,
+                            use_kernel=use_kernel, interpret=interpret)
+
+
 def merge_runs_device(runs, *, tile: int = 512, use_kernel: bool = True,
                       interpret: bool = True):
     """Run-sized engine entry point: fold k sorted runs (ordered newest

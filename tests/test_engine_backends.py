@@ -7,7 +7,8 @@ import pytest
 
 from repro.core.engine import (NumpyBackend, PallasBackend, bloom_sizing,
                                get_backend)
-from repro.core.lsm.sstable import reset_sst_ids
+from repro.core.lsm.cache import ClockCache, Disk
+from repro.core.lsm.sstable import reset_sst_ids, sstable_from_run
 from repro.core.lsm.storage import LSMStore, StoreConfig
 
 KB, MB = 1 << 10, 1 << 20
@@ -188,9 +189,101 @@ def test_store_end_to_end_pallas_backend(scheme):
         assert bool(found_p[i]) == (k in oracle)
         if found_p[i]:
             assert int(vals_p[i]) == oracle[k]
-    # identical structure -> identical I/O accounting across backends
-    assert store_p.disk.stats.pages_flushed == store_n.disk.stats.pages_flushed
-    assert store_p.disk.stats.query_pins == store_n.disk.stats.query_pins
+    # identical structure -> identical I/O accounting across backends,
+    # on the read path AND the write (flush/merge) path
+    sp, sn = store_p.disk.stats, store_n.disk.stats
+    assert sp.query_pins == sn.query_pins
+    assert sp.pages_flushed == sn.pages_flushed
+    assert sp.pages_merge_written == sn.pages_merge_written
+    assert sp.merge_pins == sn.merge_pins
+    assert sp.pages_merge_read == sn.pages_merge_read
+    assert (sp.flushes_mem, sp.flushes_log) == (sn.flushes_mem,
+                                                sn.flushes_log)
+
+
+# --------------------------- write-pin accounting ----------------------------
+def test_write_sst_accounting_flush_vs_merge():
+    """Write-path mirror of the query_pin_many read assertions: flush vs
+    merge writes land in the right counters, written pages (data + Bloom)
+    install into the buffer cache without a miss, and drop_sst
+    invalidates them."""
+    cache = ClockCache(1024)
+    disk = Disk(page_bytes=4 * KB, cache=cache)
+    keys = np.arange(0, 100, dtype=np.int64)
+    sst_f = sstable_from_run(keys, keys, 0, 0, 256, 4 * KB)
+    sst_m = sstable_from_run(keys, keys, 0, 0, 256, 4 * KB)
+    disk.write_sst(sst_f, flush=True)
+    assert disk.stats.pages_flushed == sst_f.num_pages + sst_f.bloom_pages()
+    assert disk.stats.pages_merge_written == 0
+    disk.write_sst(sst_m, flush=False)
+    assert disk.stats.pages_merge_written \
+        == sst_m.num_pages + sst_m.bloom_pages()
+    assert disk.stats.pages_flushed \
+        == sst_f.num_pages + sst_f.bloom_pages()   # unchanged
+    # freshly written pages are cache-resident: pins hit, no disk read
+    misses0 = cache.misses
+    for p in range(sst_f.num_pages):
+        disk.query_pin(sst_f.sst_id, p)
+    disk.query_pin(sst_f.sst_id, -1)               # bloom page unit
+    assert cache.misses == misses0
+    assert disk.stats.pages_query_read == 0
+    # dropping the SSTable invalidates every page (data + bloom)
+    disk.drop_sst(sst_f)
+    disk.query_pin(sst_f.sst_id, 0)
+    assert disk.stats.pages_query_read == 1
+
+
+def test_write_path_accounting_batched_vs_scalar():
+    """Flush/merge write accounting must be identical whether entries
+    arrive as one batch or one-at-a-time (with the same tick sequence)."""
+    def drive(batched):
+        store = LSMStore(small_config(write_memory_bytes=512 * KB))
+        store.create_tree("t")
+        rng = np.random.default_rng(21)
+        for _ in range(20):
+            ks = rng.integers(0, 30_000, size=300)
+            vs = rng.integers(0, 2**31, size=300)
+            if batched:
+                store.write_batch("t", ks, vs, tick=False)
+            else:
+                for k, v in zip(ks.tolist(), vs.tolist()):
+                    store.write_batch("t", [k], [v], tick=False)
+            store.scheduler.tick()
+        return store.disk.stats
+    sb, ss = drive(True), drive(False)
+    assert sb.pages_flushed == ss.pages_flushed > 0
+    assert sb.pages_merge_written == ss.pages_merge_written > 0
+    assert sb.merge_pins == ss.merge_pins
+    assert sb.pages_merge_read == ss.pages_merge_read
+    assert (sb.flushes_mem, sb.flushes_log) == (ss.flushes_mem,
+                                                ss.flushes_log)
+    assert sb.entries_written == ss.entries_written
+
+
+def test_ingest_run_parity_and_dedup(backends):
+    """ingest_run: numpy and pallas agree bit-for-bit on sorted order,
+    surviving values, and source positions (newest occurrence wins)."""
+    nb, pb = backends
+    rng = np.random.default_rng(4)
+    for n, hi in [(1, 10), (257, 40), (1000, 10**6), (640, 25)]:
+        keys = rng.integers(0, hi, size=n)
+        vals = rng.integers(-2**31 + 1, 2**31, size=n)
+        k1, v1, s1 = nb.ingest_run(keys, vals)
+        k2, v2, s2 = pb.ingest_run(keys, vals)
+        np.testing.assert_array_equal(k1, k2)
+        np.testing.assert_array_equal(v1, v2)
+        np.testing.assert_array_equal(s1, s2)
+        oracle = {}
+        for k, v in zip(keys.tolist(), vals.tolist()):
+            oracle[k] = v
+        assert k1.tolist() == sorted(oracle)
+        assert v1.tolist() == [oracle[k] for k in k1.tolist()]
+    # out-of-int32-domain keys fall back to the reference
+    before = pb.fallback_calls
+    k, v, s = pb.ingest_run(np.array([7, 2**40, 7], np.int64),
+                            np.array([1, 2, 3], np.int64))
+    assert pb.fallback_calls == before + 1
+    assert k.tolist() == [7, 2**40] and v.tolist() == [3, 2]
 
 
 def test_read_batch_counts_ops_like_scalar():

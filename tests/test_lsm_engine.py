@@ -186,6 +186,92 @@ def test_flush_policy_selection():
         assert t.name == expect, policy
 
 
+def test_scheduler_tick_flush_invariants():
+    """After any scheduler tick: store min-LSN is monotone non-decreasing
+    (log truncation can only advance), no key is lost across flush + L0
+    merge, and write-memory usage respects the configured share."""
+    rng = np.random.default_rng(12)
+    store = LSMStore(small_config(write_memory_bytes=1 * MB,
+                                  max_log_bytes=6 * MB))
+    store.create_tree("x")
+    store.create_tree("y")
+    oracle = {"x": {}, "y": {}}
+    INF = 2**62
+    last_min_lsn = 0
+    budget = store.cfg.mem_flush_threshold * store.write_memory_bytes
+    for step in range(50):
+        tree = "x" if rng.random() < 0.8 else "y"
+        ks = rng.integers(0, 60_000, size=400)
+        vs = rng.integers(0, 2**31, size=400)
+        store.write_batch(tree, ks, vs, tick=False)
+        oracle[tree].update(zip(ks.tolist(), vs.tolist()))
+        rep = store.scheduler.tick()
+        # min-LSN monotonicity: flushes only drain *old* entries
+        m = store.min_lsn()
+        assert m >= last_min_lsn, step
+        # an empty store reports the INF sentinel; future entries log at
+        # >= log_pos, so that's the effective floor
+        last_min_lsn = store.log_pos if m >= INF else m
+        # memory bound holds after every tick
+        assert store.write_memory_used() <= budget * 1.05, step
+        # default budget drains all merge debt every tick
+        assert rep.carried_debt == 0, step
+    assert store.disk.stats.pages_flushed > 0          # flushes happened
+    assert store.disk.stats.pages_merge_written > 0    # L0 merges happened
+    # no key loss across flush + L0 merge: every write still readable
+    for tree, d in oracle.items():
+        probe = np.fromiter(d.keys(), np.int64, len(d))
+        found, vals = store.read_batch(tree, probe)
+        assert found.all(), tree
+        np.testing.assert_array_equal(
+            vals, np.array([d[int(k)] for k in probe], np.int64))
+
+
+def test_scheduler_bounded_merge_budget_carries_debt():
+    """With a tiny per-tick merge budget, debt carries across ticks but
+    mandatory memory/log enforcement still holds the memory bound."""
+    rng = np.random.default_rng(3)
+    store = LSMStore(small_config(write_memory_bytes=1 * MB,
+                                  merge_budget=1))
+    store.create_tree("t")
+    saw_debt = False
+    for _ in range(40):
+        ks = rng.integers(0, 60_000, size=400)
+        store.write_batch("t", ks, ks)
+        saw_debt = saw_debt or store.scheduler.carried_debt > 0
+        assert store.write_memory_used() \
+            <= store.write_memory_bytes * 1.05
+    assert saw_debt
+    # engineer leftover debt: a big deferred batch, then one single-unit
+    # tick -- flushes run (mandatory) but merge work stays owed
+    store.write_batch("t", rng.integers(0, 60_000, size=4000),
+                      np.zeros(4000, np.int64), tick=False)
+    rep = store.scheduler.tick(merge_budget=1)
+    assert rep.merge_steps == 1
+    assert store.scheduler.carried_debt > 0
+    # an explicit-None tick overrides the bounded default and drains it
+    rep = store.scheduler.tick(merge_budget=None)
+    assert rep.merge_steps > 0
+    assert store.scheduler.carried_debt == 0
+
+
+def test_no_inline_maintenance_outside_scheduler_tick():
+    """With tick=False the write path must do no flush/merge work at all:
+    the scheduler is the sole owner of maintenance."""
+    store = LSMStore(small_config(write_memory_bytes=1 * MB))
+    store.create_tree("t")
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        ks = rng.integers(0, 60_000, size=400)
+        store.write_batch("t", ks, ks, tick=False)
+    st = store.disk.stats
+    assert st.pages_flushed == 0 and st.pages_merge_written == 0
+    assert store.write_memory_used() > store.write_memory_bytes  # over!
+    store.scheduler.tick()
+    assert store.write_memory_used() <= store.write_memory_bytes * 1.05
+    assert store.disk.stats.pages_flushed > 0
+
+
 def test_opt_policy_allocates_by_write_rate():
     """§4.2: under OPT, hot trees keep write memory share ~ write rate."""
     store = LSMStore(small_config(flush_policy="opt",
