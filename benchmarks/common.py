@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core.lsm.sstable import partition_run, reset_sst_ids
 from repro.core.lsm.storage import LSMStore, StoreConfig
+from repro.core.service import Get, Put, Scan, StorageService
 
 KB, MB = 1 << 10, 1 << 20
 
@@ -36,6 +37,13 @@ def make_store(**kw) -> LSMStore:
     return LSMStore(StoreConfig(**cfg))
 
 
+def make_service(*, governor=None, service_config=None, **kw) -> StorageService:
+    """A StorageService front door over a scaled-down store (the way new
+    drivers talk to the engine; ``make_store`` remains for internals)."""
+    return StorageService(make_store(**kw), governor=governor,
+                          config=service_config)
+
+
 def bulk_load(store: LSMStore, tree_name: str, n_records: int,
               key_stride: int = 1) -> None:
     """Install n_records directly into the tree's last level (no I/O)."""
@@ -48,11 +56,20 @@ def bulk_load(store: LSMStore, tree_name: str, n_records: int,
 
 
 class Workload:
-    """YCSB-like driver: batched mixed ops against one or more trees."""
+    """YCSB-like driver: batched mixed ops against one or more trees.
+
+    Drives everything through the ``StorageService`` front door (typed
+    requests + submit): pass either a service or a bare ``LSMStore`` (which
+    gets wrapped). Deferred (backpressured) writes are drained and retried
+    by ``submit_strict``, so stalls show up in ``IOStats.write_stalls``;
+    a request that stays deferred after retries raises rather than being
+    silently dropped from the measured op count."""
 
     def __init__(self, store, trees, key_max, *, zipf_a=0.99,
                  tree_probs=None, seed=0, scan_len=100):
-        self.store = store
+        self.service = (store if isinstance(store, StorageService)
+                        else StorageService(store))
+        self.store = self.service.store
         self.trees = list(trees)
         self.key_max = key_max
         self.scan_len = scan_len
@@ -80,25 +97,28 @@ class Workload:
             tree = self._tree()
             r = self.rng.random()
             if r < write_frac:
-                # batched end-to-end: one ingest_run backend call plus one
-                # maintenance-scheduler tick per op batch
+                # one typed Put request -> one ingest_run backend call plus
+                # one maintenance-scheduler tick per submit
                 keys = self._keys(b)
-                self.store.write_batch(tree, keys, keys)
+                self.service.submit_strict([Put(tree, keys, keys)])
             elif r < write_frac + scan_frac:
-                for lo in self._keys(max(1, b // 16)):
-                    self.store.scan(tree, int(lo), self.scan_len)
-                self.store.note_ops(0)
+                self.service.submit_strict(
+                    [Scan(tree, int(lo), self.scan_len)
+                     for lo in self._keys(max(1, b // 16))])
             else:
-                # batched end-to-end: one lookup_batch per op batch (Bloom
-                # probes issued as one backend call per SSTable per batch)
-                self.store.read_batch(tree, self._keys(b))
+                # one typed Get request -> one lookup_batch per submit
+                # (Bloom probes issued as one backend call per SSTable)
+                self.service.submit_strict([Get(tree, self._keys(b))])
             done += b
             if on_batch is not None:
                 on_batch(self.store)
 
 
 def measure(store, fn) -> dict:
-    """Run fn() and report deltas: throughput proxy + I/O per op."""
+    """Run fn() and report deltas: throughput proxy + I/O per op.
+    Accepts a bare ``LSMStore`` or a ``StorageService``. ``write_stalls``
+    (backpressure deferrals) is surfaced as the ``stalls`` row field."""
+    store = getattr(store, "store", store)     # unwrap a StorageService
     store.sync_mem_stats()
     before = store.disk.stats.copy()
     fn()

@@ -3,29 +3,34 @@
 Paper claims: (1) higher write ratio => the tuner allocates more write
 memory; (2) larger total memory => more write memory (cache gains
 plateau); (3) total I/O cost falls over the tuning trajectory.
+
+The tuner runs as the service's default ``MemoryGovernor``
+(``AdaptiveGovernor`` wrapping ``AdaptiveMemoryController`` unchanged):
+the service observes it once per submit, replacing the old hand-wired
+``on_batch=ctrl.maybe_tune()`` callback.
 """
 from __future__ import annotations
 
-from repro.core.tuner.tuner import AdaptiveMemoryController, TunerConfig
+from repro.core.service import AdaptiveGovernor
+from repro.core.tuner.tuner import TunerConfig
 
-from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
+from .common import MB, Workload, bulk_load, fmt_row, make_service, measure
 
 
 def one(write_ratio, total_mb, n_ops=400_000, n_records=150_000,
         ops_cycle=25_000):
-    store = make_store(total_memory_bytes=total_mb * MB,
-                       write_memory_bytes=2 * MB, max_log_bytes=6 * MB,
-                       sim_cache_bytes=1 * MB, flush_policy="lsn")
-    store.create_tree("t")
-    bulk_load(store, "t", n_records)
-    ctrl = AdaptiveMemoryController(store, TunerConfig(
+    governor = AdaptiveGovernor(TunerConfig(
         min_step_bytes=256 * 1024, ops_cycle=ops_cycle, min_write_mem=1 * MB))
-    w = Workload(store, ["t"], n_records)
-    m = measure(store, lambda: w.run(
-        n_ops, write_frac=write_ratio,
-        on_batch=lambda s: ctrl.maybe_tune()))
-    recs = ctrl.tuner.records
-    m["x_mb"] = store.write_memory_bytes / MB
+    svc = make_service(total_memory_bytes=total_mb * MB,
+                       write_memory_bytes=2 * MB, max_log_bytes=6 * MB,
+                       sim_cache_bytes=1 * MB, flush_policy="lsn",
+                       governor=governor)
+    svc.create_tree("t")
+    bulk_load(svc.store, "t", n_records)
+    w = Workload(svc, ["t"], n_records)
+    m = measure(svc, lambda: w.run(n_ops, write_frac=write_ratio))
+    recs = governor.records
+    m["x_mb"] = svc.store.write_memory_bytes / MB
     m["cost_first"] = recs[0].cost_per_op if recs else 0
     m["cost_last"] = recs[-1].cost_per_op if recs else 0
     m["tuning_steps"] = len(recs)

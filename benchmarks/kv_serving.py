@@ -15,10 +15,11 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.service import Delete, Get, Put, Scan
 from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
 from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
 
-from .common import MB, Workload, bulk_load, fmt_row, make_store, measure
+from .common import MB, Workload, bulk_load, fmt_row, make_service, measure
 
 
 def drive(pool, tuner, n_ops, reuse_frac, rng, working_set=1600,
@@ -65,21 +66,68 @@ def one(adaptive: bool, n_ops=40_000):
 
 def lsm_hot_key(policy: str, n_ops: int, *, merge_budget=None,
                 n_trees=4, n_records=60_000, write_mem_bytes=1 * MB):
-    """Skewed multi-tenant serving: tree 0 takes ~85% of a zipf write
-    stream; the scheduler arbitrates cross-tree flushes/merges."""
-    store = make_store(write_memory_bytes=write_mem_bytes,
+    """Skewed multi-tenant serving through the StorageService front door:
+    tree 0 takes ~85% of a zipf write stream; the scheduler arbitrates
+    cross-tree flushes/merges; admission control turns L0 pile-ups under a
+    bounded merge budget into visible write_stalls (drained + retried)."""
+    svc = make_service(write_memory_bytes=write_mem_bytes,
                        max_log_bytes=8 * MB,
                        flush_policy=policy, merge_budget=merge_budget)
     names = [f"tenant{i}" for i in range(n_trees)]
     for name in names:
-        store.create_tree(name)
-        bulk_load(store, name, n_records)
+        svc.create_tree(name)
+        bulk_load(svc.store, name, n_records)
     probs = [0.85] + [0.15 / (n_trees - 1)] * (n_trees - 1)
-    w = Workload(store, names, n_records, tree_probs=probs, seed=3)
-    m = measure(store, lambda: w.run(n_ops, write_frac=0.7))
-    m["carried_debt"] = store.scheduler.carried_debt
-    m["ticks"] = store.scheduler.ticks
+    w = Workload(svc, names, n_records, tree_probs=probs, seed=3)
+    m = measure(svc, lambda: w.run(n_ops, write_frac=0.7))
+    m["carried_debt"] = svc.store.scheduler.carried_debt
+    m["ticks"] = svc.store.scheduler.ticks
     return m
+
+
+def service_mixed(n_ops: int, *, n_trees=3, n_records=20_000):
+    """Mixed-op request plans: every submit is one shuffled batch of
+    Put/Get/Delete/Scan requests across tenant trees, planned into
+    vectorized per-(tree, kind) steps by the service. Per-tenant sessions
+    meter the write admission window."""
+    svc = make_service(write_memory_bytes=1 * MB, max_log_bytes=8 * MB,
+                       flush_policy="opt")
+    names = [f"tenant{i}" for i in range(n_trees)]
+    for name in names:
+        svc.create_tree(name)
+        bulk_load(svc.store, name, n_records)
+    sessions = [svc.session(n, max_outstanding_keys=4096) for n in names]
+    rng = np.random.default_rng(11)
+    done = 0
+    while done < n_ops:
+        reqs = []
+        batch_ops = 0
+        for _ in range(int(rng.integers(2, 6))):
+            t = names[int(rng.integers(0, n_trees))]
+            r = rng.random()
+            ks = rng.integers(0, n_records, size=int(rng.integers(32, 256)))
+            if r < 0.45:
+                reqs.append(Put(t, ks, ks))
+                batch_ops += len(ks)
+            elif r < 0.60:
+                reqs.append(Delete(t, ks[:32]))
+                batch_ops += 32
+            elif r < 0.90:
+                reqs.append(Get(t, ks))
+                batch_ops += len(ks)
+            else:
+                reqs.append(Scan(t, int(ks[0]), 100))
+                batch_ops += 1
+        rng.shuffle(reqs)
+        sess = sessions[int(rng.integers(0, n_trees))]
+        sess.submit_all(reqs)
+        done += batch_ops
+    svc.store.sync_mem_stats()
+    st = svc.stats
+    return {"submits": svc.submits, "ops": st.ops, "stalls": st.write_stalls,
+            "throughput": svc.store.throughput(),
+            "deferred": sum(s.stats.deferred_events
+                            for s in sessions)}
 
 
 def run(full: bool = False, smoke: bool = False):
@@ -101,14 +149,20 @@ def run(full: bool = False, smoke: bool = False):
                         write_mem_bytes=wm)
         rows.append(fmt_row(
             f"kv_serving/lsm_hot_skew/{policy}", m["throughput"],
-            f"io_per_op={m['io_pages_per_op']:.3f};"
+            f"io_per_op={m['io_pages_per_op']:.3f};stalls={m['stalls']};"
             f"flushes_mem={m['flushes_mem']};flushes_log={m['flushes_log']}"))
     m = lsm_hot_key("opt", n_lsm, merge_budget=4, n_records=n_recs,
                     write_mem_bytes=wm)
     rows.append(fmt_row(
         "kv_serving/lsm_hot_skew/opt_budget4", m["throughput"],
-        f"io_per_op={m['io_pages_per_op']:.3f};"
+        f"io_per_op={m['io_pages_per_op']:.3f};stalls={m['stalls']};"
         f"carried_debt={m['carried_debt']};ticks={m['ticks']}"))
+    n_mixed = 4_000 if smoke else 20_000
+    m = service_mixed(n_mixed, n_records=n_recs)
+    rows.append(fmt_row(
+        "kv_serving/service_mixed", m["throughput"],
+        f"submits={m['submits']};ops={m['ops']};stalls={m['stalls']};"
+        f"deferred={m['deferred']}"))
     return rows
 
 

@@ -1,10 +1,13 @@
 """Run reduced versions of every paper-figure benchmark.
 
-Prints ``name,value,derived`` CSV (one line per measured point).
-Full-size figures: run each module directly, e.g.
-``python -m benchmarks.fig07_single_tree``. ``--smoke`` runs a tiny-ops
-subset (single-tree schemes, TPC-C, tuner, LSM hot-key skew) as a CI
-wiring check for the batched write path and the maintenance scheduler.
+Prints ``name,value,derived`` CSV (one line per measured point). All
+drivers go through the ``StorageService`` front door (typed request plans,
+sessions, governor-owned tuning). Full-size figures: run each module
+directly, e.g. ``python -m benchmarks.fig07_single_tree``. ``--smoke``
+runs a tiny-ops subset (single-tree schemes, TPC-C transaction plans,
+governor-driven tuner, LSM hot-key skew + the shuffled mixed-op
+``service_mixed`` scenario) as a CI wiring check for the service layer,
+the batched write path and the maintenance scheduler.
 """
 from __future__ import annotations
 

@@ -1,10 +1,19 @@
 """Mini TPC-C-like driver over the LSM store (scaled; read-uncommitted
 record ops, as in the paper's AsterixDB setup). Five transaction types with
 the standard mix; per-table entry sizes preserve TPC-C's relative row sizes.
+
+Each transaction is submitted to the ``StorageService`` front door as ONE
+typed mixed-op request plan: the planner groups the per-table reads/writes
+into vectorized steps and the scheduler ticks once per transaction instead
+of once per table write. Backpressured writes are drained and retried
+(``submit_strict``), so stalls surface in ``IOStats.write_stalls`` and a
+transaction whose writes cannot land raises instead of vanishing.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.core.service import Get, Put, Scan, StorageService
 
 from .common import bulk_load
 
@@ -26,56 +35,58 @@ MIX = [("new_order", 0.45), ("payment", 0.43), ("order_status", 0.04),
 
 class TPCC:
     def __init__(self, store, seed=0):
-        self.store = store
+        self.service = (store if isinstance(store, StorageService)
+                        else StorageService(store))
+        self.store = self.service.store
         self.rng = np.random.default_rng(seed)
         for name, (eb, rows) in TABLES.items():
-            store.create_tree(name, dataset=name, entry_bytes=eb)
-            bulk_load(store, name, rows)
+            self.service.create_tree(name, dataset=name, entry_bytes=eb)
+            bulk_load(self.store, name, rows)
         self.rows = {n: r for n, (_, r) in TABLES.items()}
         self._oid = {n: r for n, r in self.rows.items()}
 
     def _k(self, table, n=1):
         return self.rng.integers(0, self.rows[table], n)
 
-    def _read(self, table, n=1):
-        self.store.read_batch(table, self._k(table, n), op=False)
+    def _read(self, table, n=1) -> Get:
+        return Get(table, self._k(table, n))
 
-    def _write(self, table, n=1, fresh=False):
+    def _write(self, table, n=1, fresh=False) -> Put:
         if fresh:
             ks = np.arange(self._oid[table], self._oid[table] + n)
             self._oid[table] += n
         else:
             ks = self._k(table, n)
-        self.store.write_batch(table, ks, ks, op=False)
+        return Put(table, ks, ks)
 
+    # Each method returns the transaction's request plan (one submit).
     def new_order(self):
-        self._read("warehouse"); self._read("district")
-        self._read("customer"); self._read("item", 10)
-        self._read("stock", 10)
-        self._write("district"); self._write("orders", 1, fresh=True)
-        self._write("new_order", 1, fresh=True)
-        self._write("order_line", 10, fresh=True)
-        self._write("stock", 10)
+        return [self._read("warehouse"), self._read("district"),
+                self._read("customer"), self._read("item", 10),
+                self._read("stock", 10),
+                self._write("district"), self._write("orders", 1, fresh=True),
+                self._write("new_order", 1, fresh=True),
+                self._write("order_line", 10, fresh=True),
+                self._write("stock", 10)]
 
     def payment(self):
-        self._read("warehouse"); self._read("district")
-        self._read("customer")
-        self._write("warehouse"); self._write("district")
-        self._write("customer"); self._write("history", 1, fresh=True)
+        return [self._read("warehouse"), self._read("district"),
+                self._read("customer"),
+                self._write("warehouse"), self._write("district"),
+                self._write("customer"), self._write("history", 1, fresh=True)]
 
     def order_status(self):
-        self._read("customer"); self._read("orders")
-        self._read("order_line", 10)
+        return [self._read("customer"), self._read("orders"),
+                self._read("order_line", 10)]
 
     def delivery(self):
-        self._write("new_order", 10); self._write("orders", 10)
-        self._write("order_line", 10); self._write("customer", 10)
+        return [self._write("new_order", 10), self._write("orders", 10),
+                self._write("order_line", 10), self._write("customer", 10)]
 
     def stock_level(self):
-        self._read("district")
-        self.store.scan("order_line", int(self._k("order_line")[0]), 100,
-                        op=False)
-        self._read("stock", 20)
+        return [self._read("district"),
+                Scan("order_line", int(self._k("order_line")[0]), 100),
+                self._read("stock", 20)]
 
     def run(self, n_txns, mix=None, on_txn=None):
         mix = mix or MIX
@@ -84,8 +95,11 @@ class TPCC:
         probs = probs / probs.sum()
         choices = self.rng.choice(len(names), n_txns, p=probs)
         for c in choices:
-            getattr(self, names[c])()
-            self.store.note_ops(1)
+            # record ops are not individually counted: one logical op per
+            # transaction, as in the paper's TPC-C accounting
+            self.service.submit_strict(getattr(self, names[c])(),
+                                       count_ops=False)
+            self.service.note_ops(1)
             if on_txn is not None:
                 on_txn()
 

@@ -1,6 +1,8 @@
-"""Multi-tenant LSM store: compares the three §4.2 flush policies under a
-skewed 10-tree workload, then shifts the workload and shows the memory
-tuner reallocating between write memory and buffer cache.
+"""Multi-tenant LSM store behind the StorageService front door: per-tenant
+sessions with admission quotas, the three §4.2 flush policies under a
+skewed 10-tree workload, then a workload shift with the AdaptiveGovernor
+(the memory tuner as the service's pluggable governor) reallocating between
+write memory and buffer cache.
 
 Run:  PYTHONPATH=src python examples/multi_tenant_store.py
 """
@@ -10,9 +12,9 @@ from pathlib import Path
 import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
-from benchmarks.common import MB, Workload, bulk_load, make_store, measure  # noqa: E402
+from benchmarks.common import MB, Workload, bulk_load, make_service, measure  # noqa: E402
 
-from repro.core import AdaptiveMemoryController, TunerConfig  # noqa: E402
+from repro.core import AdaptiveGovernor, Deferred, Put, TunerConfig  # noqa: E402
 
 N = 10
 probs = np.full(N, 0.2 / 8)
@@ -20,35 +22,48 @@ probs[:2] = 0.8 / 2                       # 80-20 hotspot
 
 print("=== flush policies under an 80-20 hotspot (write-only) ===")
 for policy in ["mem", "lsn", "opt"]:
-    store = make_store(scheme="partitioned", flush_policy=policy,
+    svc = make_service(scheme="partitioned", flush_policy=policy,
                        write_memory_bytes=2 * MB, max_log_bytes=8 * MB)
     names = [f"t{i}" for i in range(N)]
     for n in names:
-        store.create_tree(n)
-        bulk_load(store, n, 40_000)
-    w = Workload(store, names, 40_000, tree_probs=probs)
-    m = measure(store, lambda: w.run(80_000, write_frac=1.0))
-    hot_mem = sum(store.trees[f"t{i}"].mem_bytes for i in range(2))
-    cold_mem = sum(store.trees[f"t{i}"].mem_bytes for i in range(2, N))
+        svc.create_tree(n)
+        bulk_load(svc.store, n, 40_000)
+    w = Workload(svc, names, 40_000, tree_probs=probs)
+    m = measure(svc, lambda: w.run(80_000, write_frac=1.0))
+    hot_mem = sum(svc.store.trees[f"t{i}"].mem_bytes for i in range(2))
+    cold_mem = sum(svc.store.trees[f"t{i}"].mem_bytes for i in range(2, N))
     print(f"  {policy:4s}: throughput={m['throughput']:9.0f} "
-          f"write_amp={m['write_amp']:.2f} "
+          f"write_amp={m['write_amp']:.2f} stalls={m['stalls']} "
           f"hot/cold mem={hot_mem / max(cold_mem, 1):.1f}x")
 
-print("=== workload shift: write-heavy -> read-heavy (memory tuner) ===")
-store = make_store(scheme="partitioned", flush_policy="opt",
-                   write_memory_bytes=8 * MB, total_memory_bytes=48 * MB,
-                   max_log_bytes=6 * MB)
-names = [f"t{i}" for i in range(N)]
-for n in names:
-    store.create_tree(n)
-    bulk_load(store, n, 40_000)
-ctrl = AdaptiveMemoryController(store, TunerConfig(
+print("=== per-tenant sessions: admission quota defers, drain clears ===")
+svc = make_service(scheme="partitioned", flush_policy="opt",
+                   write_memory_bytes=2 * MB, max_log_bytes=8 * MB)
+svc.create_tree("tenant")
+metered = svc.session("metered", max_outstanding_keys=512)
+keys = np.arange(2048)
+res = metered.submit([Put("tenant", keys)])          # over the 512-key quota
+assert isinstance(res[0], Deferred) and res[0].reason == "session-quota"
+ok = metered.submit([Put("tenant", keys[:256])])     # within quota
+print(f"  2048-key Put -> {res[0].reason}; 256-key Put -> "
+      f"{type(ok[0]).__name__}; session deferred_events="
+      f"{metered.stats.deferred_events}")
+
+print("=== workload shift: write-heavy -> read-heavy (governed tuner) ===")
+governor = AdaptiveGovernor(TunerConfig(
     min_step_bytes=256 << 10, ops_cycle=15_000, min_write_mem=1 * MB,
     min_rel_gain=0.0002))
-w = Workload(store, names, 40_000, tree_probs=probs)
+svc = make_service(scheme="partitioned", flush_policy="opt",
+                   write_memory_bytes=8 * MB, total_memory_bytes=48 * MB,
+                   max_log_bytes=6 * MB, governor=governor)
+names = [f"t{i}" for i in range(N)]
+for n in names:
+    svc.create_tree(n)
+    bulk_load(svc.store, n, 40_000)
+w = Workload(svc, names, 40_000, tree_probs=probs)
 for phase, wf in [("write-heavy", 0.9), ("read-heavy", 0.05)]:
-    w.run(120_000, write_frac=wf, on_batch=lambda s: ctrl.maybe_tune())
+    w.run(120_000, write_frac=wf)
     print(f"  after {phase:11s}: write memory = "
-          f"{store.write_memory_bytes / MB:5.1f} MB "
-          f"(tuning steps so far: {len(ctrl.tuner.records)})")
+          f"{svc.store.write_memory_bytes / MB:5.1f} MB "
+          f"(governor plans so far: {len(svc.plans)})")
 print("OK")

@@ -1,55 +1,58 @@
-"""Quickstart: the paper's adaptive memory management in ~60 lines.
+"""Quickstart: the paper's adaptive memory management behind one front door.
 
-Creates an LSM store with a partitioned memory component, writes a skewed
-multi-tree workload, watches the optimal flush policy allocate write memory
-by write rate, and lets the memory tuner move the write-memory/buffer-cache
-boundary to cut I/O per operation.
+Opens a ``StorageService`` over an LSM store with a partitioned memory
+component, submits typed mixed-op request plans (Put + Get in one batch)
+for a skewed two-tree workload, and lets the default ``AdaptiveGovernor``
+(the §5.4 memory tuner) move the write-memory/buffer-cache boundary while
+the §4.2 optimal flush policy allocates write memory by write rate.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import AdaptiveMemoryController, TunerConfig
-from repro.core.lsm.storage import LSMStore, StoreConfig
+from repro.core import (AdaptiveGovernor, Get, Put, StorageService,
+                        StoreConfig, TunerConfig)
 
 KB, MB = 1 << 10, 1 << 20
 
-store = LSMStore(StoreConfig(
-    total_memory_bytes=64 * MB,
-    write_memory_bytes=4 * MB,          # the tuner will adjust this
-    sim_cache_bytes=1 * MB,
-    page_bytes=4 * KB, entry_bytes=256,
-    active_sstable_bytes=256 * KB, sstable_bytes=512 * KB,
-    max_log_bytes=8 * MB,
-    scheme="partitioned",               # §4.1 partitioned memory component
-    flush_policy="opt",                 # §4.2 write-rate-proportional
-))
-hot = store.create_tree("hot")
-cold = store.create_tree("cold")
-ctrl = AdaptiveMemoryController(store, TunerConfig(
-    min_step_bytes=256 * KB, ops_cycle=20_000, min_write_mem=1 * MB))
+service = StorageService.open(
+    StoreConfig(
+        total_memory_bytes=64 * MB,
+        write_memory_bytes=4 * MB,          # the governor will adjust this
+        sim_cache_bytes=1 * MB,
+        page_bytes=4 * KB, entry_bytes=256,
+        active_sstable_bytes=256 * KB, sstable_bytes=512 * KB,
+        max_log_bytes=8 * MB,
+        scheme="partitioned",               # §4.1 partitioned memory component
+        flush_policy="opt",                 # §4.2 write-rate-proportional
+    ),
+    governor=AdaptiveGovernor(TunerConfig(
+        min_step_bytes=256 * KB, ops_cycle=20_000, min_write_mem=1 * MB)))
+hot = service.create_tree("hot")
+cold = service.create_tree("cold")
 
 rng = np.random.default_rng(0)
 for step in range(400):
-    # 90% of writes go to 'hot'; reads are zipf-ish point lookups
+    # 90% of writes go to 'hot'; one submit = one typed mixed-op plan
+    # (vectorized write + read steps, one scheduler tick, governor observed)
     tree = "hot" if step % 10 else "cold"
     keys = rng.integers(0, 200_000, size=256)
-    store.write(tree, keys, keys)
-    found, vals = store.read_batch(tree, keys[:32])  # batched point reads
-    assert found.all() and (vals == keys[:32]).all()
-    ctrl.maybe_tune()
+    ack, reads = service.submit([Put(tree, keys, keys),
+                                 Get(tree, keys[:32])])
+    assert reads.found.all() and (reads.vals == keys[:32]).all()
 
-st = store.disk.stats
+store = service.store
+st = service.stats
 print(f"execution backend: {store.backend.name} "
       f"(select with StoreConfig.backend or REPRO_LSM_BACKEND)")
-print(f"write memory (tuned): {store.write_memory_bytes / MB:.1f} MB")
+print(f"write memory (governed): {store.write_memory_bytes / MB:.1f} MB")
 print(f"hot tree memory:  {hot.mem_bytes / KB:8.0f} KB  "
       f"(write-rate-proportional share)")
 print(f"cold tree memory: {cold.mem_bytes / KB:8.0f} KB")
 print(f"disk pages written={st.pages_written} read={st.pages_read} "
-      f"over {st.ops} ops")
-print(f"tuning steps taken: {len(ctrl.tuner.records)}")
-for r in ctrl.tuner.records[:5]:
+      f"over {st.ops} ops; write stalls deferred={st.write_stalls}")
+print(f"governor plans applied: {len(service.plans)}")
+for r in service.governor.records[:5]:
     print(f"  x={r.x / MB:6.1f}MB cost'={r.cost_prime:+.2e} "
           f"-> x_next={r.x_next / MB:6.1f}MB {r.stopped}")
 assert hot.mem_bytes > cold.mem_bytes, "OPT policy favors the hot tree"

@@ -1,6 +1,8 @@
 """End-to-end serving driver: a reduced yi-6b-family model serving batched
-requests with the paged KV pool + prefix cache managed by the paper's
-memory tuner (the adaptive HBM split).
+requests with the paged KV pool + prefix cache governed by ``HBMGovernor``
+-- the paper's memory tuner behind the same pluggable ``MemoryGovernor``
+interface the LSM ``StorageService`` uses, here splitting HBM between the
+KV pool and the prefix cache instead of write memory and buffer cache.
 
 Run:  PYTHONPATH=src python examples/serve_adaptive_kv.py
 """
@@ -12,4 +14,4 @@ stats = serve_main([
 ])
 hits = stats["prefix_hits"]
 assert hits > 0, "shared prefixes should hit the prefix cache"
-print("OK — served with adaptive HBM management")
+print("OK — served with governor-managed adaptive HBM split")

@@ -1,7 +1,7 @@
 """Model/run configuration + registry for the assigned architectures."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 _REGISTRY: dict = {}
 

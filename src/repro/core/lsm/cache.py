@@ -10,6 +10,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 
 @dataclass
 class IOStats:
@@ -29,7 +31,8 @@ class IOStats:
     entries_merged_disk: int = 0    # disk merge CPU proxy (entries)
     entries_written: int = 0
     ops: int = 0                    # logical operations observed
-    write_stalls: int = 0           # flush pauses due to too many L0 groups
+    write_stalls: int = 0           # write admission deferrals (service
+                                    # backpressure: L0 stall / mem pressure)
 
     def copy(self) -> "IOStats":
         return IOStats(**vars(self))
@@ -156,8 +159,29 @@ class Disk:
         so batched reads and the scalar loop produce the same I/O counters;
         repeated pins of one page within a batch hit the cache after the
         first miss, exactly as in the scalar path.
+
+        Fast path: a *consecutive* repeat pin is always a hit (nothing can
+        evict the page between two adjacent pins of it, and the re-pin
+        leaves the reference bit set exactly as the first did), so runs of
+        repeats collapse to one real pin plus counter bumps. Duplicate-free
+        batches pay one vectorized comparison; Bloom-page batches (all the
+        same page) skip the Python loop almost entirely. Requires a real
+        cache: with capacity 0 every pin misses, including repeats.
         """
-        for p in page_indices:
+        pages = np.asarray(page_indices, np.int64)
+        n = len(pages)
+        if n > 1 and self.cache.capacity > 0:
+            keep = np.empty(n, bool)
+            keep[0] = True
+            np.not_equal(pages[1:], pages[:-1], out=keep[1:])
+            reps = n - int(keep.sum())
+            if reps:
+                for p in pages[keep]:
+                    self.query_pin(sst_id, int(p))
+                self.stats.query_pins += reps
+                self.cache.hits += reps
+                return
+        for p in pages:
             self.query_pin(sst_id, int(p))
 
     def merge_pin(self, sst_id: int, page_index: int) -> None:

@@ -13,7 +13,7 @@ Baseline components (monolithic B+-tree, Accordion) live in
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -55,7 +55,7 @@ class TimeModel:
     cpu_merge_disk: float = 0.05e-6       # per entry per disk-merge pass
     cpu_lookup: float = 1.00e-6           # per point lookup / scan seek
 
-    def elapsed(self, stats, *, scheme: str) -> tuple:
+    def elapsed(self, stats, *, scheme: str) -> tuple[float, float]:
         page = 16 * 1024
         io = ((stats.pages_flushed + stats.pages_merge_written) * page
               / self.write_bw
@@ -105,12 +105,34 @@ class StoreConfig:
     time_model: TimeModel = field(default_factory=TimeModel)
 
     def validate(self):
-        assert self.scheme in SCHEMES, self.scheme
-        assert self.flush_policy in POLICIES, self.flush_policy
-        assert self.backend is None or self.backend in available_backends(), \
-            self.backend
-        assert self.write_memory_bytes + self.sim_cache_bytes \
-            <= self.total_memory_bytes
+        # ValueErrors, not asserts: config mistakes must fail loudly even
+        # under ``python -O``, with a message saying how to fix them.
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}; "
+                             f"expected one of {SCHEMES}")
+        if self.flush_policy not in POLICIES:
+            raise ValueError(f"unknown flush_policy {self.flush_policy!r}; "
+                             f"expected one of {POLICIES}")
+        if self.backend is not None \
+                and self.backend not in available_backends():
+            raise ValueError(
+                f"unknown backend {self.backend!r}; registered backends: "
+                f"{sorted(available_backends())} (or leave None to use "
+                f"the REPRO_LSM_BACKEND env var)")
+        if self.entry_bytes <= 0:
+            raise ValueError(f"entry_bytes must be positive, got "
+                             f"{self.entry_bytes}")
+        if self.merge_budget is not None and self.merge_budget < 0:
+            raise ValueError(
+                f"merge_budget must be >= 0 (or None to drain all debt "
+                f"every tick), got {self.merge_budget}")
+        if self.write_memory_bytes + self.sim_cache_bytes \
+                > self.total_memory_bytes:
+            raise ValueError(
+                f"write_memory_bytes ({self.write_memory_bytes}) + "
+                f"sim_cache_bytes ({self.sim_cache_bytes}) exceed "
+                f"total_memory_bytes ({self.total_memory_bytes}); shrink "
+                f"the write memory or simulated cache")
         return self
 
 

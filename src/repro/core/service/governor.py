@@ -1,0 +1,97 @@
+"""MemoryGovernor: memory adaptation as a first-class, pluggable policy.
+
+The service owns exactly one governor and calls ``observe(service)`` once
+per submit. The governor inspects whatever state it cares about (the
+store's I/O stats, the ghost cache, the log) and returns a ``MemoryPlan``
+describing any reallocation it decided on -- or ``None`` when it has
+nothing to say. This unifies the two adaptation mechanisms the paper
+scatters across layers:
+
+  * the §5.4 memory tuner (write memory vs buffer cache boundary) --
+    ``AdaptiveGovernor``, the default, wrapping the existing
+    ``AdaptiveMemoryController`` unchanged in behavior;
+  * the §4.2 flush-policy selection -- any governor may switch the store's
+    flush policy through ``MemoryPlan.flush_policy``.
+
+``StaticGovernor`` pins a fixed allocation (the baseline schemes). New
+policies implement ``observe`` -- e.g. the serving runtime's
+``repro.runtime.hbm_tuner.HBMGovernor`` drives the KV-pool / prefix-cache
+HBM split through this same interface.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..tuner.tuner import AdaptiveMemoryController, TunerConfig
+
+
+@dataclass(frozen=True)
+class MemoryPlan:
+    """One adaptation decision. ``None`` fields mean "leave unchanged"."""
+
+    write_memory_bytes: int | None = None
+    flush_policy: str | None = None
+    note: str = ""
+
+
+class MemoryGovernor:
+    """Strategy interface: ``observe(service) -> MemoryPlan | None``.
+
+    ``attach(store)`` is called once when the governor is handed to a
+    service; governors needing per-cycle baselines snapshot them there.
+    """
+
+    def attach(self, store) -> None:
+        pass
+
+    def observe(self, service) -> MemoryPlan | None:
+        raise NotImplementedError
+
+
+class StaticGovernor(MemoryGovernor):
+    """No adaptation: optionally pins an allocation/policy once at attach
+    time, then never moves it (the static baseline schemes of §6)."""
+
+    def __init__(self, *, write_memory_bytes: int | None = None,
+                 flush_policy: str | None = None):
+        self.write_memory_bytes = write_memory_bytes
+        self.flush_policy = flush_policy
+        self._pinned = False
+
+    def observe(self, service) -> MemoryPlan | None:
+        if self._pinned or (self.write_memory_bytes is None
+                            and self.flush_policy is None):
+            return None
+        self._pinned = True
+        return MemoryPlan(write_memory_bytes=self.write_memory_bytes,
+                          flush_policy=self.flush_policy, note="static-pin")
+
+
+class AdaptiveGovernor(MemoryGovernor):
+    """The default governor: the §5.4 memory tuner, behavior-identical to
+    driving ``AdaptiveMemoryController.maybe_tune()`` per batch by hand.
+
+    The controller is built at ``attach`` (before any operations run), so
+    its tuning cycle baselines match a hand-constructed controller; its
+    records stay available at ``governor.controller.tuner.records``.
+    """
+
+    def __init__(self, cfg: TunerConfig | None = None):
+        self.cfg = cfg or TunerConfig()
+        self.controller: AdaptiveMemoryController | None = None
+
+    def attach(self, store) -> None:
+        self.controller = AdaptiveMemoryController(store, self.cfg)
+
+    def observe(self, service) -> MemoryPlan | None:
+        if self.controller is None:             # governor used store-less
+            self.attach(service.store)
+        rec = self.controller.maybe_tune()
+        if rec is None or rec.x_next == rec.x:
+            return None
+        return MemoryPlan(write_memory_bytes=int(rec.x_next),
+                          note=f"tuner:{rec.stopped or 'step'}")
+
+    @property
+    def records(self):
+        return self.controller.tuner.records if self.controller else []

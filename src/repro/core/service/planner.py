@@ -1,0 +1,80 @@
+"""Request planner: groups a mixed-op submit batch into vectorized steps.
+
+``build_plan`` partitions the submitted requests into ``PlanStep``s keyed by
+(tree, op-kind). Steps execute in order of each group's *first appearance*
+in the request list; within a step, requests keep submission order. One
+put/delete/get step dispatches as ONE batched backend call (the per-request
+keys concatenated), so a plan step is bit-identical to the equivalent
+direct ``LSMStore.write_batch`` / ``delete_batch`` / ``read_batch`` call on
+the concatenated keys; scan steps execute their requests sequentially
+(scans are per-range operations).
+
+The grouping defines the submit batch's intra-batch semantics: a Get
+observes a Put from the same batch iff the Put's (tree, "put") group first
+appears before the Get's (tree, "get") group. Callers needing strict
+read-your-writes across kinds issue separate submits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .requests import Request, Scan, request_kind
+
+
+@dataclass
+class PlanStep:
+    """One vectorized execution unit: all same-kind requests for one tree."""
+
+    tree: str
+    kind: str                                  # put | delete | get | scan
+    indices: list[int] = field(default_factory=list)   # submission positions
+    requests: list[Request] = field(default_factory=list)
+
+    @property
+    def n_keys(self) -> int:
+        return sum(1 if isinstance(r, Scan) else len(r.keys)
+                   for r in self.requests)
+
+    def concat_keys(self) -> np.ndarray:
+        return np.concatenate([r.keys for r in self.requests])
+
+    def concat_vals(self) -> np.ndarray:
+        """Put payloads with the vals=None -> keys default applied."""
+        return np.concatenate([r.keys if r.vals is None else r.vals
+                               for r in self.requests])
+
+    def slices(self):
+        """(index, request, start, stop) views back into the concat arrays."""
+        off = 0
+        for i, r in zip(self.indices, self.requests):
+            n = len(r.keys)
+            yield i, r, off, off + n
+            off += n
+
+
+@dataclass
+class ExecutionPlan:
+    steps: list[PlanStep]
+    n_requests: int
+
+    def describe(self) -> str:
+        parts = [f"{s.kind}:{s.tree}[{len(s.requests)}r/{s.n_keys}k]"
+                 for s in self.steps]
+        return " -> ".join(parts) if parts else "(empty)"
+
+
+def build_plan(requests) -> ExecutionPlan:
+    groups: dict[tuple[str, str], PlanStep] = {}
+    n = 0
+    for i, req in enumerate(requests):
+        kind = request_kind(req)      # raises TypeError on foreign objects
+        key = (req.tree, kind)
+        step = groups.get(key)
+        if step is None:
+            step = groups[key] = PlanStep(tree=req.tree, kind=kind)
+        step.indices.append(i)
+        step.requests.append(req)
+        n += 1
+    return ExecutionPlan(steps=list(groups.values()), n_requests=n)

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced as make_reduced
 from repro.models import build_model, init_params
-from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
+from repro.runtime.hbm_tuner import HBMGovernor, HBMTunerConfig
 from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
 from repro.runtime.serving import make_prefill_step, make_serve_step
 
@@ -49,7 +49,9 @@ def main(argv=None):
 
     pool = PagedKVPool(KVPoolConfig(page_tokens=16, total_pages=1024,
                                     pool_pages=512, policy="opt"))
-    tuner = HBMTuner(pool, HBMTunerConfig(ops_cycle=256))
+    # the HBM split is governed through the same MemoryGovernor interface
+    # the LSM StorageService uses (observe-per-step -> MemoryPlan)
+    governor = HBMGovernor(pool, HBMTunerConfig(ops_cycle=256))
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, args.prompt_len // 2)
@@ -81,9 +83,10 @@ def main(argv=None):
             tok, cache = decode(params, cache, tok[:, None],
                                 jnp.int32(args.prompt_len + g))
             pool.append_tokens(name, b)
-            rec = tuner.maybe_tune()
-            if rec:
-                print(f"[tuner] pool={int(rec['x'])}->{int(rec['x_next'])} "
+            plan = governor.observe()
+            if plan:
+                rec = governor.records[-1]
+                print(f"[governor] pool={int(rec['x'])}->{int(rec['x_next'])} "
                       f"pages miss_rate={rec['miss_rate']:.2f} "
                       f"offload/op={rec['offload_per_op']:.3f}")
         pool.finish_stream(name)
@@ -93,7 +96,7 @@ def main(argv=None):
     print(f"[serve] tokens={total_tokens} prefix_hit_rate={hit:.2f} "
           f"offload_pages={st['offload_pages']} "
           f"pool_pages={pool.cfg.pool_pages} "
-          f"tuner_steps={len(tuner.records)}")
+          f"tuner_steps={len(governor.records)}")
     return st
 
 

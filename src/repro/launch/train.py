@@ -13,12 +13,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced as make_reduced
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import build_model, init_params, make_shardings
-from repro.models.params import abstract_params
 from repro.runtime.checkpoint import Checkpointer
 from repro.runtime.elastic import Preemption, StragglerMonitor
 from repro.runtime.sharding import activation_sharding, param_rules

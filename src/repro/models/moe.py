@@ -10,7 +10,6 @@ dense residual) and granite-moe (top-8 of 32).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ groups of N mamba layers + one *shared-weight* attention block).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

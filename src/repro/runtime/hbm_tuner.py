@@ -20,6 +20,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..core.service.governor import MemoryGovernor, MemoryPlan
 from ..core.tuner.tuner import TunerConfig, newton_step
 from .kvcache import PagedKVPool
 
@@ -85,3 +86,28 @@ class HBMTuner:
             p.set_pool_pages(int(x_next))
         self._last = dict(st)
         return rec
+
+
+class HBMGovernor(MemoryGovernor):
+    """The HBM split behind the storage-service governor interface: the
+    same ``observe() -> MemoryPlan`` contract the LSM ``StorageService``
+    uses, driving the KV-pool / prefix-cache boundary instead of write
+    memory / buffer cache. Serving loops call ``observe`` per decode step
+    (see ``repro.runtime.serving.greedy_generate``)."""
+
+    def __init__(self, pool: PagedKVPool, cfg: HBMTunerConfig | None = None):
+        self.tuner = HBMTuner(pool, cfg)
+
+    @property
+    def records(self):
+        return self.tuner.records
+
+    def observe(self, service=None) -> MemoryPlan | None:
+        rec = self.tuner.maybe_tune()
+        if rec is None:
+            return None
+        # The tuner actuates set_pool_pages itself; the plan only reports
+        # the decision. write_memory_bytes stays None -- the quantity here
+        # is POOL PAGES, and populating the byte field would make a
+        # StorageService mis-actuate it as an LSM write-memory size.
+        return MemoryPlan(note=f"hbm-pool-pages:{int(rec['x_next'])}")

@@ -11,7 +11,6 @@ transfers over gradient all-reduces.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

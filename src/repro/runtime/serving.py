@@ -31,8 +31,14 @@ def make_serve_step(model):
     return serve_step
 
 
-def greedy_generate(model, params, cache, prompt, steps: int):
-    """Host-side loop for examples/tests (jit per-step)."""
+def greedy_generate(model, params, cache, prompt, steps: int,
+                    governor=None):
+    """Host-side loop for examples/tests (jit per-step).
+
+    ``governor`` is an optional ``MemoryGovernor`` (e.g. the HBM split's
+    ``repro.runtime.hbm_tuner.HBMGovernor``) observed once per decode step
+    -- the serving-loop analogue of the StorageService observing its
+    governor once per submit."""
     prefill = jax.jit(make_prefill_step(model))
     step = jax.jit(make_serve_step(model))
     tok, cache = prefill(params, cache, {"tokens": prompt})
@@ -41,4 +47,6 @@ def greedy_generate(model, params, cache, prompt, steps: int):
     for i in range(steps - 1):
         tok, cache = step(params, cache, tok[:, None], jnp.int32(pos + i))
         out.append(tok)
+        if governor is not None:
+            governor.observe(None)     # no storage service in this loop
     return jnp.stack(out, axis=1), cache

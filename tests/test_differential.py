@@ -21,6 +21,8 @@ import pytest
 
 from repro.core.lsm.sstable import reset_sst_ids
 from repro.core.lsm.storage import LSMStore, StoreConfig
+from repro.core.service import (Deferred, Delete, Get, Put, Scan,
+                                ServiceConfig, StorageService)
 from repro.core.tuner.tuner import AdaptiveMemoryController, TunerConfig
 
 try:
@@ -267,6 +269,133 @@ def test_write_batch_rejects_reserved_tombstone_payload():
     from repro.core.lsm.sstable import TOMBSTONE
     with pytest.raises(ValueError):
         store.write_batch("a", [1], [TOMBSTONE])
+
+
+# --------------------------- service front door -------------------------------
+def gen_request_batches(rng, n_batches=10):
+    """Shuffled mixed-op submit batches (typed requests across both trees)."""
+    batches = []
+    for _ in range(n_batches):
+        reqs = []
+        for _ in range(int(rng.integers(2, 7))):
+            tree = TREES[int(rng.integers(0, len(TREES)))]
+            r = rng.random()
+            krng = np.random.default_rng(int(rng.integers(0, 2**31)))
+            size = int(rng.integers(10, 200))
+            if r < 0.40:
+                reqs.append(Put(tree, krng.integers(0, KEY_SPACE, size),
+                                krng.integers(0, 2**31, size)))
+            elif r < 0.55:
+                reqs.append(Delete(tree, krng.integers(0, KEY_SPACE, size)))
+            elif r < 0.85:
+                reqs.append(Get(tree,
+                                krng.integers(0, KEY_SPACE + 500, size)))
+            else:
+                reqs.append(Scan(tree, int(krng.integers(0, KEY_SPACE)),
+                                 int(krng.integers(10, 400))))
+        order = rng.permutation(len(reqs))
+        batches.append([reqs[i] for i in order])
+    return batches
+
+
+def _kind(req):
+    return {Put: "put", Delete: "delete", Get: "get",
+            Scan: "scan"}[type(req)]
+
+
+def direct_apply(store, reqs):
+    """The equivalent direct per-tree batched calls: the service's
+    documented grouping contract -- (tree, kind) groups in first-appearance
+    order, each dispatched as ONE batched store call on the concatenated
+    keys, one scheduler tick iff any writes -- hand-rolled against the bare
+    ``LSMStore``. Returns per-request read outputs in submission order."""
+    groups: dict = {}
+    for i, req in enumerate(reqs):
+        groups.setdefault((req.tree, _kind(req)), []).append((i, req))
+    outputs = {}
+    wrote = False
+    for (tree, kind), members in groups.items():
+        if kind in ("put", "delete"):
+            keys = np.concatenate([r.keys for _, r in members])
+            if kind == "put":
+                vals = np.concatenate(
+                    [r.keys if r.vals is None else r.vals
+                     for _, r in members])
+                store.write_batch(tree, keys, vals, tick=False)
+            else:
+                store.delete_batch(tree, keys, tick=False)
+            wrote = True
+        elif kind == "get":
+            found, vals = store.read_batch(
+                tree, np.concatenate([r.keys for _, r in members]))
+            off = 0
+            for i, r in members:
+                n = len(r.keys)
+                outputs[i] = ("get", found[off:off + n].tolist(),
+                              vals[off:off + n].tolist())
+                off += n
+        else:
+            for i, r in members:
+                outputs[i] = ("scan", store.scan(tree, r.lo, r.n))
+    if wrote:
+        store.scheduler.tick()
+    return [outputs[i] for i in sorted(outputs)]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+@pytest.mark.parametrize("seed", [21, 22])
+def test_service_submit_matches_direct_calls(backend, seed):
+    """StorageService.submit of shuffled mixed-op batches must leave store
+    state AND IOStats bit-identical to the equivalent direct per-tree
+    batched calls, with identical per-request read results."""
+    batches = gen_request_batches(np.random.default_rng(seed))
+
+    reset_sst_ids()
+    svc = StorageService(LSMStore(small_config(backend)),
+                         config=ServiceConfig(admission=False))
+    for t in TREES:
+        svc.create_tree(t)
+    out_svc = []
+    for reqs in batches:
+        for res in svc.submit(reqs):
+            assert not isinstance(res, Deferred)
+            if hasattr(res, "found"):
+                out_svc.append(("get", res.found.tolist(),
+                                res.vals.tolist()))
+            elif hasattr(res, "count"):
+                out_svc.append(("scan", res.count))
+
+    reset_sst_ids()
+    store = LSMStore(small_config(backend))
+    for t in TREES:
+        store.create_tree(t)
+    out_direct = []
+    for reqs in batches:
+        out_direct.extend(direct_apply(store, reqs))
+
+    assert out_svc == out_direct
+    assert fingerprint(svc.store) == fingerprint(store)
+    assert vars(svc.store.disk.stats) == vars(store.disk.stats)
+
+
+@pytest.mark.parametrize("scheme", ["btree-dynamic", "accordion-data"])
+def test_service_submit_matches_direct_calls_schemes(scheme):
+    batches = gen_request_batches(np.random.default_rng(23), n_batches=6)
+    reset_sst_ids()
+    svc = StorageService(LSMStore(small_config(scheme=scheme)),
+                         config=ServiceConfig(admission=False))
+    for t in TREES:
+        svc.create_tree(t)
+    for reqs in batches:
+        svc.submit(reqs)
+    reset_sst_ids()
+    store = LSMStore(small_config(scheme=scheme))
+    for t in TREES:
+        store.create_tree(t)
+    for reqs in batches:
+        direct_apply(store, reqs)
+    assert fingerprint(svc.store) == fingerprint(store)
+    assert vars(svc.store.disk.stats) == vars(store.disk.stats)
 
 
 # --------------------------- hypothesis suite ---------------------------------

@@ -1,7 +1,6 @@
 """Multi-device tests (subprocess with forced host device count): the
 production sharding rules on a small mesh, pipeline parallelism, and
 elastic checkpoint resharding across different mesh sizes."""
-import json
 import os
 import subprocess
 import sys

@@ -3,7 +3,6 @@ accounting (XLA's cost_analysis counts while bodies once) and
 collective-byte math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.utils.hlo import analyze_hlo, roofline_terms

@@ -1,6 +1,5 @@
 """Flash attention kernel (interpret mode) vs pure-jnp oracle: shape/dtype
 sweep incl. GQA, sliding window, softcap, and head-dim padding."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -8,7 +8,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.merge.merge import merge_tiles
-from repro.kernels.merge.ops import merge_runs_dedup, merge_sorted_runs
+from repro.kernels.merge.ops import merge_runs_dedup
 from repro.kernels.merge.ref import merge_tiles_ref
 
 

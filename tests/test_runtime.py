@@ -1,13 +1,11 @@
 """Runtime tests: checkpoint/restart determinism, crash safety, straggler
 monitor, paged KV pool policies, HBM tuner direction."""
 import json
-import shutil
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -17,7 +15,6 @@ from repro.runtime.elastic import StragglerMonitor, run_elastic
 from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
 from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
 from repro.runtime.training import TrainConfig, make_train_step
-from repro.models.params import abstract_params
 from repro.runtime.training import opt_state_specs
 
 
