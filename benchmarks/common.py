@@ -14,6 +14,7 @@ import numpy as np
 from repro.core.lsm.sstable import partition_run, reset_sst_ids
 from repro.core.lsm.storage import LSMStore, StoreConfig
 from repro.core.service import Get, Put, Scan, StorageService
+from repro.core.shard import ShardedStore, ShardRouter
 
 KB, MB = 1 << 10, 1 << 20
 
@@ -44,15 +45,36 @@ def make_service(*, governor=None, service_config=None, **kw) -> StorageService:
                           config=service_config)
 
 
-def bulk_load(store: LSMStore, tree_name: str, n_records: int,
-              key_stride: int = 1) -> None:
-    """Install n_records directly into the tree's last level (no I/O)."""
+def make_sharded_service(*, shards: int | None = None,
+                         router: ShardRouter | None = None, governor=None,
+                         service_config=None, **kw) -> StorageService:
+    """A StorageService over a ``ShardedStore``: N shards behind one
+    shared memory arena (scaled-down config)."""
+    reset_sst_ids()
+    cfg = dict(BASE)
+    cfg.update(kw)
+    store = ShardedStore(StoreConfig(**cfg), shards=shards, router=router)
+    return StorageService(store, governor=governor, config=service_config)
+
+
+def _install_last_level(store, tree_name: str, keys) -> None:
     t = store.trees[tree_name]
-    keys = np.arange(0, n_records * key_stride, key_stride, dtype=np.int64)
     ssts = partition_run(keys, keys, 0, 0, t.entry_bytes,
                          store.cfg.page_bytes, store.cfg.sstable_bytes)
     t.levels.levels = [ssts]
     t.levels.adjust(store.cfg.active_sstable_bytes)
+
+
+def bulk_load(store, tree_name: str, n_records: int,
+              key_stride: int = 1) -> None:
+    """Install n_records directly into the tree's last level (no I/O).
+    Over a ``ShardedStore``, keys are routed and installed per shard."""
+    keys = np.arange(0, n_records * key_stride, key_stride, dtype=np.int64)
+    if isinstance(store, ShardedStore):
+        for si, sel in store.router.split(keys):
+            _install_last_level(store.shards[si].store, tree_name, keys[sel])
+        return
+    _install_last_level(store, tree_name, keys)
 
 
 class Workload:

@@ -15,11 +15,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.service import Delete, Get, Put, Scan
+from repro.core.service import AdaptiveGovernor, Delete, Get, Put, Scan
+from repro.core.shard import ShardRouter
+from repro.core.tuner.tuner import TunerConfig
 from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
 from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
 
-from .common import MB, Workload, bulk_load, fmt_row, make_service, measure
+from .common import (MB, Workload, bulk_load, fmt_row, make_service,
+                     make_sharded_service, measure)
 
 
 def drive(pool, tuner, n_ops, reuse_frac, rng, working_set=1600,
@@ -130,6 +133,50 @@ def service_mixed(n_ops: int, *, n_trees=3, n_records=20_000):
                             for s in sessions)}
 
 
+def sharded_hot_shard(n_ops: int, *, shards=4, n_records=40_000,
+                      write_mem_bytes=1 * MB, hot_frac=0.85,
+                      write_frac=0.7, batch=256):
+    """Sharded hot-shard YCSB: a range-partitioned keyspace where
+    ``hot_frac`` of the traffic lands in shard 0's range. Because every
+    shard draws from ONE memory arena, the skew becomes a cross-shard
+    memory wall: the global scheduler's write-rate-proportional (OPT)
+    flush ranking keeps flushing the cold shards' trees, so the shared
+    write memory migrates to the hot shard (``hot_mem_share`` well above
+    1/shards) while the governor keeps tuning the global boundary."""
+    router = ShardRouter.ranges(shards, n_records)
+    governor = AdaptiveGovernor(TunerConfig(
+        min_step_bytes=256 * 1024, ops_cycle=2_000, min_write_mem=1 * MB))
+    svc = make_sharded_service(router=router, governor=governor,
+                               write_memory_bytes=write_mem_bytes,
+                               max_log_bytes=8 * MB, flush_policy="opt")
+    svc.create_tree("kv")
+    bulk_load(svc.store, "kv", n_records)
+    rng = np.random.default_rng(7)
+    hot_hi = n_records // shards          # shard 0's key range
+
+    def drive():
+        done = 0
+        while done < n_ops:
+            lo, hi = (0, hot_hi) if rng.random() < hot_frac \
+                else (hot_hi, n_records)
+            ks = rng.integers(lo, hi, size=batch)
+            if rng.random() < write_frac:
+                svc.submit_strict([Put("kv", ks, ks)])
+            else:
+                svc.submit_strict([Get("kv", ks)])
+            done += batch
+
+    m = measure(svc, drive)
+    per = svc.store.shard_tree_stats()
+    total_mem = max(1, sum(a["mem_bytes"] for a in per))
+    flushed = [a["bytes_flushed_mem"] + a["bytes_flushed_log"] for a in per]
+    m["shards"] = shards
+    m["hot_mem_share"] = per[0]["mem_bytes"] / total_mem
+    m["hot_flush_share"] = flushed[0] / max(1, sum(flushed))
+    m["tuning_steps"] = len(governor.records)
+    return m
+
+
 def run(full: bool = False, smoke: bool = False):
     n = 2_000 if smoke else (80_000 if full else 24_000)
     rows = []
@@ -163,6 +210,18 @@ def run(full: bool = False, smoke: bool = False):
         "kv_serving/service_mixed", m["throughput"],
         f"submits={m['submits']};ops={m['ops']};stalls={m['stalls']};"
         f"deferred={m['deferred']}"))
+    n_shard = 6_000 if smoke else (60_000 if full else 24_000)
+    for shards in ([4] if not full else [2, 4, 8]):
+        m = sharded_hot_shard(n_shard, shards=shards,
+                              n_records=n_recs,
+                              write_mem_bytes=(MB // 2) if smoke else 1 * MB)
+        rows.append(fmt_row(
+            f"kv_serving/sharded_hot_shard/s{shards}", m["throughput"],
+            f"scheme=partitioned;shards={shards};stalls={m['stalls']};"
+            f"hot_mem_share={m['hot_mem_share']:.3f};"
+            f"hot_flush_share={m['hot_flush_share']:.3f};"
+            f"io_per_op={m['io_pages_per_op']:.3f};"
+            f"tuning_steps={m['tuning_steps']}"))
     return rows
 
 

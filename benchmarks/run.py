@@ -5,14 +5,48 @@ drivers go through the ``StorageService`` front door (typed request plans,
 sessions, governor-owned tuning). Full-size figures: run each module
 directly, e.g. ``python -m benchmarks.fig07_single_tree``. ``--smoke``
 runs a tiny-ops subset (single-tree schemes, TPC-C transaction plans,
-governor-driven tuner, LSM hot-key skew + the shuffled mixed-op
-``service_mixed`` scenario) as a CI wiring check for the service layer,
-the batched write path and the maintenance scheduler.
+governor-driven tuner, LSM hot-key skew, the shuffled mixed-op
+``service_mixed`` scenario and the sharded hot-shard scenario) as a CI
+wiring check for the service layer, the sharded data plane, the batched
+write path and the maintenance scheduler.
+
+``--json`` additionally writes ``BENCH_<module>.json`` next to the cwd:
+one structured record per measured row ({name, value, scheme?, shards?,
+throughput?, stalls?, derived{...}}), so the performance trajectory of the
+repo is recorded run-over-run (CI uploads these as artifacts).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
+
+
+def parse_row(row: str) -> dict:
+    """``name,value,derived`` -> a structured record. ``derived`` is a
+    ``k=v;k=v`` string; numeric values are coerced, and the well-known
+    keys (scheme, shards, stalls) are lifted to the top level."""
+    name, value, derived = row.split(",", 2)
+    rec: dict = {"name": name, "value": float(value)}
+    fields: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            fields[k] = int(v)
+        except ValueError:
+            try:
+                fields[k] = float(v)
+            except ValueError:
+                fields[k] = v
+    rec["derived"] = fields
+    for k in ("scheme", "shards", "stalls"):
+        if k in fields:
+            rec[k] = fields[k]
+    if "throughput" not in fields and name.startswith("kv_serving/"):
+        rec["throughput"] = rec["value"]
+    return rec
 
 
 def main() -> None:
@@ -24,6 +58,7 @@ def main() -> None:
                    kv_serving)
     full = "--full" in sys.argv
     smoke = "--smoke" in sys.argv
+    json_out = "--json" in sys.argv
     if smoke:
         modules = [fig07_single_tree, fig14_tpcc, fig15_tuner_ycsb,
                    kv_serving]
@@ -36,10 +71,22 @@ def main() -> None:
     print("name,value,derived")
     for mod in modules:
         t0 = time.time()
-        for row in (mod.run(full=False, smoke=True) if smoke
-                    else mod.run(full=full)):
+        rows = list(mod.run(full=False, smoke=True) if smoke
+                    else mod.run(full=full))
+        for row in rows:
             print(row)
-        print(f"# {mod.__name__}: {time.time() - t0:.1f}s", file=sys.stderr)
+        elapsed = time.time() - t0
+        print(f"# {mod.__name__}: {elapsed:.1f}s", file=sys.stderr)
+        if json_out:
+            short = mod.__name__.rsplit(".", 1)[-1]
+            records = [parse_row(r) for r in rows]
+            for rec in records:
+                rec["preset"] = ("smoke" if smoke
+                                 else "full" if full else "default")
+            path = f"BENCH_{short}.json"
+            with open(path, "w") as f:
+                json.dump(records, f, indent=1)
+            print(f"# wrote {path} ({len(records)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

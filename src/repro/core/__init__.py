@@ -4,6 +4,7 @@
 from .engine import ExecutionBackend, get_backend  # noqa: F401
 from .lsm.storage import LSMStore, StoreConfig, TimeModel  # noqa: F401
 from .lsm.tree import LSMTree  # noqa: F401
+from .shard import ShardedStore, ShardRouter, StorageShard  # noqa: F401
 from .service import (AdaptiveGovernor, Deferred, Delete, Get,  # noqa: F401
                       GetResult, MemoryGovernor, MemoryPlan, Put, Scan,
                       ScanResult, ServiceConfig, Session, StaticGovernor,

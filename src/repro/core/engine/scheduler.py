@@ -54,6 +54,37 @@ class TickReport:
     carried_debt: int = 0     # debt left unserved by the merge budget
 
 
+def rank_flush_victim(cands, policy):
+    """§4.2 flush-victim ranking over ``(store, tree)`` candidates whose
+    memory components are non-empty. The stores may all be one store
+    (single-store scheduler) or the shards of one arena (global
+    scheduler): the ranking is the same either way, which is what makes a
+    one-shard deployment bit-identical to a bare ``LSMStore``.
+
+    Returns the chosen ``(store, tree)`` pair, or None if no candidates.
+    """
+    if not cands:
+        return None
+    if policy == "mem":
+        return max(cands, key=lambda st: st[1].mem_bytes)
+    if policy == "lsn":
+        return min(cands, key=lambda st: st[1].min_lsn)
+    # opt: flush the tree whose memory ratio most exceeds its optimal
+    # write-rate-proportional ratio a_i_opt = r_i / sum_j r_j.
+    rates = [sum(b for _, b in s._rate_win[t.name]) for s, t in cands]
+    total_rate = sum(rates)
+    used = [t.mem_bytes for _, t in cands]
+    total_used = sum(used)
+    if total_rate == 0 or total_used == 0:
+        return min(cands, key=lambda st: st[1].min_lsn)
+    best, best_gap = None, None
+    for st, r, u in zip(cands, rates, used):
+        gap = u / total_used - r / total_rate
+        if best_gap is None or gap > best_gap:
+            best, best_gap = st, gap
+    return best
+
+
 class MaintenanceScheduler:
     """Arbitrates flush/merge work across every tree of one ``LSMStore``."""
 
@@ -68,31 +99,10 @@ class MaintenanceScheduler:
         """Rank non-empty trees by the configured flush policy and return
         the victim (None if all memory components are empty)."""
         s = self.store
-        nonempty = [t for t in s.trees.values() if not t.mem.is_empty()]
-        if not nonempty:
-            return None
-        pol = s.cfg.flush_policy
-        if pol == "mem":
-            return max(nonempty, key=lambda t: t.mem_bytes)
-        if pol == "lsn":
-            return min(nonempty, key=lambda t: t.min_lsn)
-        # opt: flush the tree whose memory ratio most exceeds its optimal
-        # write-rate-proportional ratio a_i_opt = r_i / sum_j r_j.
-        rates = {t.name: sum(b for _, b in s._rate_win[t.name])
-                 for t in nonempty}
-        total_rate = sum(rates.values())
-        used = {t.name: t.mem_bytes for t in nonempty}
-        total_used = sum(used.values())
-        if total_rate == 0 or total_used == 0:
-            return min(nonempty, key=lambda t: t.min_lsn)
-        best, best_gap = None, None
-        for t in nonempty:
-            a = used[t.name] / total_used
-            a_opt = rates[t.name] / total_rate
-            gap = a - a_opt
-            if best_gap is None or gap > best_gap:
-                best, best_gap = t, gap
-        return best
+        pick = rank_flush_victim(
+            [(s, t) for t in s.trees.values() if not t.mem.is_empty()],
+            s.cfg.flush_policy)
+        return None if pick is None else pick[1]
 
     # -- flush execution ------------------------------------------------------
     def flush_tree(self, tree, *, trigger: str,
@@ -225,6 +235,174 @@ class MaintenanceScheduler:
             self.flush_dataset(self.store._pending_evict.pop(0),
                                trigger="mem")
             rep.flushes += 1
+        rep.flushes += self._enforce_memory()
+        rep.flushes += self._enforce_log()
+        budget = self.merge_budget if merge_budget is _UNSET else merge_budget
+        rep.merge_steps = self._run_merges(budget)
+        rep.carried_debt = self.carried_debt
+        return rep
+
+
+class ShardedMaintenanceScheduler:
+    """Global maintenance arbiter of a sharded data plane.
+
+    Each shard keeps its own ``MaintenanceScheduler`` (the flush/upkeep
+    executor for that shard's trees), but nothing ticks them individually:
+    this class runs the same four tick phases *across all shards* under
+    ONE write-memory budget, ONE log cap and ONE discretionary merge
+    budget -- the paper's cross-tree arbitration lifted to cross-shard:
+
+      * memory enforcement compares the arena-wide usage (every shard's
+        trees) against the shared threshold and picks flush victims by
+        the §4.2 policy ranked over all (shard, tree) pairs;
+      * log enforcement flushes the globally minimal-LSN tree, since all
+        shards append to the arena's single transaction log;
+      * the merge pass serves ``merge_budget`` maintenance units to the
+        (shard, tree) with the largest merge debt, wherever it lives --
+        a hot shard therefore drains the whole store's merge bandwidth,
+        which is exactly the backpressure the service's per-shard
+        admission gate then surfaces as ``Deferred`` on that shard only.
+
+    With one shard every phase degenerates to ``MaintenanceScheduler``'s
+    behavior bit-for-bit (the differential suite enforces this).
+    """
+
+    def __init__(self, stores, arena, *, merge_budget: int | None = None):
+        self.stores = list(stores)
+        self.arena = arena
+        self.merge_budget = merge_budget
+        self.ticks = 0
+        self.carried_debt = 0
+
+    # -- global aggregates ----------------------------------------------------
+    def _used(self) -> int:
+        return sum(s.write_memory_used() for s in self.stores)
+
+    def _min_lsn(self) -> int:
+        return min((s.min_lsn() for s in self.stores), default=_INF)
+
+    def _log_length(self) -> int:
+        m = self._min_lsn()
+        lp = self.arena.log_pos
+        return lp - (m if m < _INF else lp)
+
+    def pick_flush_victim(self):
+        """Globally ranked §4.2 flush victim: (store, tree) or None."""
+        return rank_flush_victim(
+            [(s, t) for s in self.stores for t in s.trees.values()
+             if not t.mem.is_empty()],
+            self.arena.cfg.flush_policy)
+
+    # -- tick phases (global twins of MaintenanceScheduler's) -----------------
+    def _enforce_memory(self) -> int:
+        cfg = self.arena.cfg
+        flushes = 0
+        if cfg.scheme.startswith("btree-static"):
+            # per-dataset quota against the *global* write memory: a
+            # dataset's usage is summed over its per-shard slices and the
+            # whole dataset flushes everywhere once it crosses quota.
+            quota = self.arena.write_memory_bytes \
+                / max(1, cfg.max_active_datasets)
+            names: list[str] = []
+            for s in self.stores:
+                for ds in s.datasets:
+                    if ds not in names:
+                        names.append(ds)
+            for ds in names:
+                used = sum(s.trees[n].mem_bytes for s in self.stores
+                           for n in s.datasets.get(ds, ()))
+                if used >= quota:
+                    for s in self.stores:
+                        if ds in s.datasets:
+                            s.scheduler.flush_dataset(ds, trigger="mem")
+                    flushes += 1
+            return flushes
+        # shared-pool schemes
+        budget = cfg.mem_flush_threshold * self.arena.write_memory_bytes
+        for s in self.stores:
+            for t in s.trees.values():
+                m = t.mem
+                if hasattr(m, "budget_hint_bytes"):
+                    m.budget_hint_bytes = int(budget)
+                if getattr(m, "request_flush", False):
+                    s.scheduler.flush_tree(t, trigger="mem")
+                    m.request_flush = False
+                    flushes += 1
+        guard = 0
+        while self._used() > budget and guard < 1000:
+            guard += 1
+            pick = self.pick_flush_victim()
+            if pick is None:
+                break
+            s, t = pick
+            freed = s.scheduler.flush_tree(
+                t, trigger="mem", forced_kind=cfg.forced_flush_kind)
+            flushes += 1
+            if freed == 0:
+                break
+        return flushes
+
+    def _enforce_log(self) -> int:
+        cfg = self.arena.cfg
+        flushes = 0
+        guard = 0
+        while self._log_length() > cfg.mem_flush_threshold * cfg.max_log_bytes \
+                and guard < 1000:
+            guard += 1
+            if self._min_lsn() >= _INF:
+                break
+            pick = min(((s, t) for s in self.stores
+                        for t in s.trees.values()
+                        if not t.mem.is_empty() or t.min_lsn < _INF),
+                       key=lambda st: st[1].min_lsn, default=None)
+            if pick is None or pick[1].mem.is_empty():
+                break
+            freed = pick[0].scheduler.flush_tree(
+                pick[1], trigger="log", forced_kind=cfg.forced_flush_kind)
+            flushes += 1
+            if freed == 0:
+                break
+        return flushes
+
+    def _run_merges(self, budget: int | None) -> int:
+        """Largest-debt-first allocation of maintenance units across every
+        (shard, tree); unspent debt carries to the next tick."""
+        steps = 0
+        owners: dict = {}
+        debts: dict = {}
+        for si, s in enumerate(self.stores):
+            for t in s.trees.values():
+                k = (si, t.name)
+                owners[k] = (s, t)
+                debts[k] = t.merge_debt(s._tree_share(t))
+        guard = 0
+        while guard < 20_000 and (budget is None or steps < budget):
+            guard += 1
+            k = max(debts, key=debts.__getitem__, default=None)
+            if k is None or debts[k] <= 0:
+                break
+            s, t = owners[k]
+            if t.maintenance_step(s._tree_share(t)):
+                steps += 1
+                debts[k] = t.merge_debt(s._tree_share(t))
+            else:
+                debts[k] = 0
+        self.carried_debt = sum(debts.values())
+        return steps
+
+    # -- the tick --------------------------------------------------------------
+    def tick(self, *, merge_budget=_UNSET) -> TickReport:
+        """One maintenance round over every shard (same override contract
+        as ``MaintenanceScheduler.tick``)."""
+        self.ticks += 1
+        rep = TickReport()
+        for s in self.stores:
+            rep.upkeep_steps += s.scheduler._mem_upkeep()
+        for s in self.stores:
+            while s._pending_evict:          # static-scheme LRU evictions
+                s.scheduler.flush_dataset(s._pending_evict.pop(0),
+                                          trigger="mem")
+                rep.flushes += 1
         rep.flushes += self._enforce_memory()
         rep.flushes += self._enforce_log()
         budget = self.merge_budget if merge_budget is _UNSET else merge_budget

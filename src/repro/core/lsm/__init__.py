@@ -1,3 +1,4 @@
+from .arena import MemoryArena  # noqa: F401
 from .baselines import AccordionMemComponent, BTreeMemComponent  # noqa: F401
 from .cache import ClockCache, Disk, IOStats  # noqa: F401
 from .grouped_l0 import FlatL0, GroupedL0  # noqa: F401

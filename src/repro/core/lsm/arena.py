@@ -1,0 +1,57 @@
+"""MemoryArena: the shared memory pool one or more LSM stores draw from.
+
+The paper's architecture (§3) pools write memory and the buffer cache so
+the tuner can move memory to where the workload needs it. ``MemoryArena``
+is that pool as an object: it owns the tunable write-memory size ``x``,
+the clock buffer cache of ``total - x - sim`` pages, the ghost (simulated)
+cache feeding the tuner, the byte-accounted ``Disk`` (and therefore the
+global ``IOStats``), and the shared transaction log position.
+
+A standalone ``LSMStore`` creates a private arena; a ``ShardedStore``
+creates ONE arena and hands it to every shard, which is exactly how the
+paper's memory walls become *cross-shard* walls: all shards compete for
+the same write memory and buffer cache, and the governor/tuner arbitrates
+the boundary globally by resizing this arena.
+"""
+from __future__ import annotations
+
+from ..tuner.simcache import GhostCache
+from .cache import ClockCache, Disk
+
+
+class MemoryArena:
+    """Shared write-memory pool + buffer cache + log for member stores."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.write_memory_bytes = cfg.write_memory_bytes
+        self.ghost = GhostCache(cfg.sim_cache_bytes // cfg.page_bytes)
+        cache_pages = max(
+            0, (cfg.total_memory_bytes - cfg.write_memory_bytes
+                - cfg.sim_cache_bytes) // cfg.page_bytes)
+        self.cache = ClockCache(cache_pages, on_evict=self.ghost.add_evicted)
+        self.disk = Disk(cfg.page_bytes, self.cache, self.ghost)
+        self.log_pos = 0                    # shared transaction-log offset
+        self.members: list = []             # stores drawing from this arena
+
+    def register(self, store) -> None:
+        self.members.append(store)
+
+    @property
+    def stats(self):
+        return self.disk.stats
+
+    def used_bytes(self) -> int:
+        """Write memory held across every member store."""
+        return sum(s.write_memory_used() for s in self.members)
+
+    def set_write_memory(self, x: int) -> None:
+        """Apply a new write-memory size (the tuner's actuator): the
+        buffer cache gives up (or reclaims) the complementary pages."""
+        cfg = self.cfg
+        x = int(min(max(x, 1 << 20), cfg.total_memory_bytes
+                    - cfg.sim_cache_bytes - (1 << 20)))
+        self.write_memory_bytes = x
+        pages = max(0, (cfg.total_memory_bytes - x - cfg.sim_cache_bytes)
+                    // cfg.page_bytes)
+        self.cache.resize(pages)

@@ -54,6 +54,26 @@ def assign_queries(tables, qkeys):
     return ti, ok
 
 
+def assign_ranges(tables, los, his):
+    """Vectorized seek for *range* queries over a disjoint, min_key-sorted
+    table list: the tables overlapping range q -- [los[q], his[q]] both
+    inclusive -- are exactly ``tables[a[q]:b[q]]``.
+
+    The batched companion of ``assign_queries``: two searchsorted calls
+    over sorted table bounds serve the whole batch instead of a per-range
+    Python sweep of the table list.
+    """
+    n = len(los)
+    if not tables:
+        z = np.zeros(n, np.int64)
+        return z, z.copy()
+    starts = np.fromiter((t.min_key for t in tables), np.int64, len(tables))
+    ends = np.fromiter((t.max_key for t in tables), np.int64, len(tables))
+    a = np.searchsorted(ends, los, side="left")      # first table ending >= lo
+    b = np.searchsorted(starts, his, side="right")   # tables starting <= hi
+    return a.astype(np.int64), np.maximum(a, b).astype(np.int64)
+
+
 def probe_tier(tables, keys, found, vals, unresolved, lookup_batch, *,
                pre_probe=None, post_lookup=None):
     """Probe one disjoint, sorted tier with every still-unresolved key,

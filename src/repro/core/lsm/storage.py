@@ -22,9 +22,8 @@ import numpy as np
 
 from ..engine import available_backends, get_backend
 from ..engine.scheduler import MaintenanceScheduler
-from ..tuner.simcache import GhostCache
+from .arena import MemoryArena
 from .baselines import AccordionMemComponent, BTreeMemComponent
-from .cache import ClockCache, Disk
 from .memtable import PartitionedMemComponent
 from .sstable import TOMBSTONE
 from .tree import LSMTree
@@ -137,21 +136,20 @@ class StoreConfig:
 
 
 class LSMStore:
-    def __init__(self, cfg: StoreConfig):
+    def __init__(self, cfg: StoreConfig, *, arena: MemoryArena | None = None):
+        """``arena=None`` (standalone store) builds a private memory pool;
+        a ``ShardedStore`` passes ONE shared arena to every shard so all
+        shards compete for the same write memory, buffer cache and log."""
         self.cfg = cfg.validate()
         self.backend = get_backend(cfg.backend)
-        self.ghost = GhostCache(cfg.sim_cache_bytes // cfg.page_bytes)
-        cache_pages = max(
-            0, (cfg.total_memory_bytes - cfg.write_memory_bytes
-                - cfg.sim_cache_bytes) // cfg.page_bytes)
-        self.cache = ClockCache(cache_pages, on_evict=self.ghost.add_evicted)
-        self.disk = Disk(cfg.page_bytes, self.cache, self.ghost)
+        self.arena = arena if arena is not None else MemoryArena(cfg)
+        self.arena.register(self)
+        self.ghost = self.arena.ghost
+        self.cache = self.arena.cache
+        self.disk = self.arena.disk
         self.trees: dict[str, LSMTree] = {}
         self.datasets: dict[str, list[str]] = {}
         self.tree_dataset: dict[str, str] = {}
-        self.write_memory_bytes = cfg.write_memory_bytes
-        # transaction log
-        self.log_pos = 0                        # byte offset
         # per-tree write-rate windows for the OPT policy (§4.2)
         self._rate_win: dict[str, deque] = {}
         # LRU order of active datasets for the static schemes; evicted
@@ -206,19 +204,27 @@ class LSMStore:
         return min((t.min_lsn for t in self.trees.values()), default=_INF)
 
     @property
+    def write_memory_bytes(self) -> int:
+        """The tunable ``x``: lives in the (possibly shared) arena."""
+        return self.arena.write_memory_bytes
+
+    @property
+    def log_pos(self) -> int:
+        """Transaction-log byte offset (shared across a sharded store)."""
+        return self.arena.log_pos
+
+    @log_pos.setter
+    def log_pos(self, v: int) -> None:
+        self.arena.log_pos = v
+
+    @property
     def log_length(self) -> int:
         m = self.min_lsn()
         return self.log_pos - (m if m < _INF else self.log_pos)
 
     def set_write_memory(self, x: int) -> None:
         """Apply a new write-memory size (tuner's actuator)."""
-        cfg = self.cfg
-        x = int(min(max(x, 1 << 20), cfg.total_memory_bytes
-                    - cfg.sim_cache_bytes - (1 << 20)))
-        self.write_memory_bytes = x
-        pages = max(0, (cfg.total_memory_bytes - x - cfg.sim_cache_bytes)
-                    // cfg.page_bytes)
-        self.cache.resize(pages)
+        self.arena.set_write_memory(x)
 
     # -- write path ------------------------------------------------------------------
     def _ingest(self, tree_name: str, keys, vals, *, op: bool,
@@ -339,6 +345,16 @@ class LSMStore:
         if op:
             self.disk.stats.ops += 1
         return self.trees[tree_name].scan(int(lo), int(n))
+
+    def scan_batch(self, tree_name: str, los, ns, *, op: bool = True):
+        """Batched range scans: ONE op per range (the same contract as a
+        loop of scalar ``scan`` calls), executed with a vectorized seek
+        through the tree. Returns live-entry counts int64[n]."""
+        los = np.asarray(los, np.int64)
+        ns = np.asarray(ns, np.int64)
+        if op:
+            self.disk.stats.ops += len(los)
+        return self.trees[tree_name].scan_batch(los, ns)
 
     # -- reporting ----------------------------------------------------------------------
     def sync_mem_stats(self) -> None:

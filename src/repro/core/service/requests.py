@@ -103,7 +103,11 @@ class Deferred:
     ``"l0-stall"`` (too many L0 groups on the target tree),
     ``"memory-pressure"`` (shared write memory over its admission slack) or
     ``"session-quota"`` (the session's outstanding-work cap). Retry via
-    ``StorageService.drain()`` + resubmit (or ``submit_all``)."""
+    ``StorageService.drain()`` + resubmit (or ``submit_all``).
+
+    Over a sharded store the gate is per shard, so ``request`` may be
+    *narrowed* to the keys routed to the stalled shard(s); keys on healthy
+    shards executed and are not re-carried."""
 
     request: Request
     reason: str

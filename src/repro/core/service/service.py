@@ -5,8 +5,9 @@ shared write memory and a buffer cache. ``StorageService`` is that front
 door as an API:
 
   * ``submit(requests)`` plans a mixed-op batch into vectorized per-(tree,
-    kind) steps (see ``planner``), dispatches them through the store's
-    batched backend paths (``write_batch`` / ``read_batch`` / ``scan``),
+    kind) steps -- per-(tree, shard, kind) write steps over a sharded
+    store (see ``planner``) -- dispatches them through the store's batched
+    backend paths (``write_batch`` / ``read_batch`` / ``scan_batch``),
     and returns per-request typed results in submission order;
   * maintenance is amortized: ONE ``MaintenanceScheduler.tick()`` per
     submit that executed writes, instead of one per write call;
@@ -24,11 +25,13 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 from ..lsm.storage import LSMStore, POLICIES, StoreConfig
 from .governor import MemoryGovernor, MemoryPlan, StaticGovernor
 from .planner import PlanStep, build_plan
-from .requests import (Deferred, Get, GetResult, Put, Result, ScanResult,
-                       WriteAck)
+from .requests import (Deferred, Delete, Get, GetResult, Put, Result,
+                       ScanResult, WriteAck)
 
 _UNSET = object()
 
@@ -94,9 +97,10 @@ class Session:
 
 
 class StorageService:
-    """Front door over one ``LSMStore`` (owned or adopted)."""
+    """Front door over one ``LSMStore`` or ``ShardedStore`` (owned or
+    adopted)."""
 
-    def __init__(self, store: LSMStore, *,
+    def __init__(self, store, *,
                  governor: MemoryGovernor | None = None,
                  config: ServiceConfig | None = None):
         self.store = store
@@ -144,6 +148,14 @@ class StorageService:
                 if self.cfg.l0_stall_groups is not None
                 else self.store.cfg.l0_max_groups)
 
+    def _step_tree(self, step: PlanStep):
+        """The one LSMTree a step targets: over a sharded store, a write
+        step names a (tree, shard) pair, so admission inspects the hot
+        shard's tree only."""
+        if step.shard is not None:
+            return self.store.shard_tree(step.shard, step.tree)
+        return self.store.trees[step.tree]
+
     def _refuse_write(self, step: PlanStep,
                       session: Session | None) -> str | None:
         """Admission check for one write step, just before execution.
@@ -153,7 +165,7 @@ class StorageService:
         charge the session's admission window (the keys never execute, and
         charging them would spuriously defer later steps of the submit)."""
         if self.cfg.admission:
-            tree = self.store.trees[step.tree]
+            tree = self._step_tree(step)
             if tree.l0.num_groups >= self._stall_groups():
                 return "l0-stall"
             slack = self.cfg.memory_admit_slack
@@ -167,7 +179,9 @@ class StorageService:
         return None
 
     def stalled_trees(self) -> list[str]:
-        """Trees currently refused writes by the L0 admission gate."""
+        """Trees currently refused writes by the L0 admission gate. Over a
+        sharded store, entries are per-shard (``name@shard``): only the
+        stalled shard refuses writes, the rest keep serving."""
         g = self._stall_groups()
         return [n for n, t in self.store.trees.items()
                 if t.l0.num_groups >= g]
@@ -192,17 +206,21 @@ class StorageService:
     # -- execution ------------------------------------------------------------
     def _execute_step(self, step: PlanStep, results: list,
                       count_ops: bool) -> None:
+        """Dispatch one plan step as ONE batched store call. Write acks
+        are assembled by ``submit`` (a request may span several per-shard
+        write steps); read/scan steps set their results here."""
         s = self.store
+        if step.shard is not None:
+            # the planner already routed this write step's keys: dispatch
+            # straight to the shard's store instead of re-routing through
+            # ShardedStore (every key would be hashed a second time)
+            s = self.store.shards[step.shard].store
         if step.kind == "put":
             s.write_batch(step.tree, step.concat_keys(), step.concat_vals(),
                           op=count_ops, tick=False)
-            for i, r, _, _ in step.slices():
-                results[i] = WriteAck(step.tree, len(r.keys))
         elif step.kind == "delete":
             s.delete_batch(step.tree, step.concat_keys(),
                            op=count_ops, tick=False)
-            for i, r, _, _ in step.slices():
-                results[i] = WriteAck(step.tree, len(r.keys))
         elif step.kind == "get":
             found, vals = s.read_batch(step.tree, step.concat_keys(),
                                        op=count_ops)
@@ -210,18 +228,33 @@ class StorageService:
                 results[i] = GetResult(step.tree, found[a:b].copy(),
                                        vals[a:b].copy())
         elif step.kind == "scan":
-            for i, r in zip(step.indices, step.requests):
-                n = s.scan(step.tree, r.lo, r.n, op=count_ops)
-                results[i] = ScanResult(step.tree, n)
+            los = np.array([r.lo for r in step.requests], np.int64)
+            lens = np.array([r.n for r in step.requests], np.int64)
+            counts = s.scan_batch(step.tree, los, lens, op=count_ops)
+            for j, i in enumerate(step.indices):
+                results[i] = ScanResult(step.tree, int(counts[j]))
         else:                                     # pragma: no cover
             raise AssertionError(step.kind)
+
+    @staticmethod
+    def _narrow(req, sel: np.ndarray):
+        """The sub-request carrying only positions ``sel`` of the keys --
+        what a partially-deferred sharded write hands back for retry."""
+        if isinstance(req, Put):
+            return Put(req.tree, req.keys[sel],
+                       None if req.vals is None else req.vals[sel])
+        return Delete(req.tree, req.keys[sel])
 
     def submit(self, requests, *, session: Session | None = None,
                count_ops: bool = True) -> list[Result]:
         """Plan and execute a mixed-op batch; one scheduler tick amortized
         over all writes; governor observed once. Returns per-request
-        results in submission order (``Deferred`` for refused writes)."""
-        plan = build_plan(requests)
+        results in submission order (``Deferred`` for refused writes --
+        over a sharded store, refusal is per shard, and a Deferred may
+        carry a request narrowed to the keys that did not execute)."""
+        requests = list(requests)
+        plan = build_plan(requests,
+                          router=getattr(self.store, "router", None))
         if plan.n_requests == 0:
             return []
         self.submits += 1
@@ -229,6 +262,11 @@ class StorageService:
             session._begin_submit()
         results: list = [None] * plan.n_requests
         wrote = False
+        # Per write-request bookkeeping: a sharded request spans one step
+        # per shard, so acks/deferrals aggregate after all steps ran.
+        w_req = {i: r for i, r in enumerate(requests)
+                 if isinstance(r, (Put, Delete))}
+        w_defer: dict[int, tuple[list, str]] = {}
         for step in plan.steps:
             if step.kind in ("put", "delete"):
                 reason = self._refuse_write(step, session)
@@ -238,13 +276,27 @@ class StorageService:
                     if session is not None:
                         session.stats.deferred_keys += step.n_keys
                         session.stats.deferred_events += 1
-                    for i, r, _, _ in step.slices():
-                        results[i] = Deferred(r, reason)
+                    sels = step.key_sel if step.key_sel is not None \
+                        else [None] * len(step.requests)
+                    for i, sel in zip(step.indices, sels):
+                        w_defer.setdefault(i, ([], reason))[0].append(sel)
                     continue
                 wrote = True
             self._execute_step(step, results, count_ops)
             if session is not None:
                 session.stats.executed_keys += step.n_keys
+        for i, r in w_req.items():
+            d = w_defer.get(i)
+            if d is None:
+                results[i] = WriteAck(r.tree, len(r.keys))
+                continue
+            sels, reason = d
+            if any(s is None for s in sels) \
+                    or sum(len(s) for s in sels) == len(r.keys):
+                results[i] = Deferred(r, reason)
+            else:
+                sel = np.sort(np.concatenate(sels))
+                results[i] = Deferred(self._narrow(r, sel), reason)
         if session is not None:
             session.stats.submitted_keys += sum(s.n_keys for s in plan.steps)
         if wrote:
@@ -266,7 +318,18 @@ class StorageService:
         request per submit (each gets a fresh admission window), so only a
         single request larger than the window itself stays deferred --
         and that terminates the loop rather than spinning."""
+        requests = list(requests)
         results = self.submit(requests, session=session, count_ops=count_ops)
+
+        def settle(i, out):
+            # A retried Deferred may carry a request narrowed to the keys
+            # that had not executed; once it completes, the ack must cover
+            # the caller's ORIGINAL request, not just the remainder.
+            if isinstance(out, WriteAck) and out.n != len(requests[i].keys):
+                out = WriteAck(out.tree, len(requests[i].keys))
+            results[i] = out
+            return not isinstance(out, Deferred)
+
         for _ in range(max_rounds):
             pending = [(i, r) for i, r in enumerate(results)
                        if isinstance(r, Deferred)]
@@ -282,13 +345,11 @@ class StorageService:
                 retry = self.submit([req for _, req in engine],
                                     session=session, count_ops=count_ops)
                 for (i, _), out in zip(engine, retry):
-                    progressed |= not isinstance(out, Deferred)
-                    results[i] = out
+                    progressed |= settle(i, out)
             for i, req in quota:
                 out = self.submit([req], session=session,
                                   count_ops=count_ops)[0]
-                progressed |= not isinstance(out, Deferred)
-                results[i] = out
+                progressed |= settle(i, out)
             if not progressed:
                 break
         return results

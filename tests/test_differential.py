@@ -262,6 +262,39 @@ def test_tombstones_purged_at_bottom_level():
     assert not found.any()
 
 
+def test_scan_batch_matches_scalar_scans():
+    """A batch of q scans must be bit-identical -- counts, page pins,
+    IOStats, cache state -- to q scalar ``scan`` calls (the service's
+    grouped-scan step relies on this, including the one-op-per-range
+    accounting contract)."""
+    def build():
+        reset_sst_ids()
+        store = LSMStore(small_config())
+        store.create_tree("a")
+        rng = np.random.default_rng(42)
+        for _ in range(6):
+            ks = rng.integers(0, KEY_SPACE, 400)
+            store.write_batch("a", ks, ks + 1)
+        store.delete_batch("a", rng.integers(0, KEY_SPACE, 100))
+        return store
+
+    ranges = [(0, 300), (250, 500), (1500, 600), (1999, 50), (700, 1)]
+    los = np.array([lo for lo, _ in ranges], np.int64)
+    ns = np.array([n for _, n in ranges], np.int64)
+
+    s_scalar = build()
+    scalar = [s_scalar.scan("a", lo, n) for lo, n in ranges]
+    s_batch = build()
+    batched = s_batch.scan_batch("a", los, ns)
+    assert batched.tolist() == scalar
+    assert vars(s_scalar.disk.stats) == vars(s_batch.disk.stats)
+    assert fingerprint(s_scalar) == fingerprint(s_batch)
+    # one logical op per range on both paths
+    before = s_batch.disk.stats.ops
+    s_batch.scan_batch("a", los, ns)
+    assert s_batch.disk.stats.ops - before == len(ranges)
+
+
 def test_write_batch_rejects_reserved_tombstone_payload():
     reset_sst_ids()
     store = LSMStore(small_config())

@@ -1,0 +1,383 @@
+"""Sharded data plane: differential + property tests.
+
+The load-bearing invariant: ``ShardedStore(shards=1)`` is *bit-identical*
+-- final structural state, per-read results, IOStats -- to a direct
+``LSMStore`` on random mixed workloads (both backends), because routing is
+then the identity and the global maintenance scheduler degenerates to the
+single-store tick phase-for-phase. ``shards=N`` must match the dict oracle
+with conserved global IOStats: every shard writes through ONE shared
+``Disk``, so per-shard counter sums equal the global counters exactly.
+
+Router properties: every key routes to exactly one shard, routing is a
+pure function (deterministic across processes -- no ``hash()`` salt), and
+per-shard key selections partition the input batch in order.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.lsm.sstable import reset_sst_ids
+from repro.core.lsm.storage import LSMStore
+from repro.core.service import (Deferred, Put, ServiceConfig,
+                                StorageService, WriteAck)
+from repro.core.shard import ShardedStore, ShardRouter
+from repro.core.tuner.tuner import AdaptiveMemoryController, TunerConfig
+
+from test_differential import (KB, KEY_SPACE, MB, TREES, _batch_keys,
+                               fingerprint, gen_ops, gen_request_batches,
+                               small_config)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------- sharded replay -----------------------------------
+def replay_sharded(ops, *, backend="numpy", shards=1, router=None,
+                   scheme="partitioned", policy="lsn"):
+    """The sharded twin of ``test_differential.replay``: applies the same
+    op vocabulary to a ``ShardedStore``, asserting every read against the
+    dict oracle. Returns (store, outputs, oracle)."""
+    reset_sst_ids()
+    store = ShardedStore(small_config(backend, scheme, policy),
+                         shards=shards, router=router)
+    for t in TREES:
+        store.create_tree(t)
+    ctrl = AdaptiveMemoryController(store, TunerConfig(
+        min_step_bytes=64 * KB, min_write_mem=1 * MB, ops_cycle=10**9))
+    oracle = {t: {} for t in TREES}
+    outputs = []
+    for op in ops:
+        kind = op[0]
+        if kind == "write":
+            _, t, seed, size = op
+            ks, vs = _batch_keys(seed, size)
+            store.write_batch(t, ks, vs, tick=False)
+            store.scheduler.tick()
+            oracle[t].update(zip(ks.tolist(), vs.tolist()))
+        elif kind == "delete":
+            _, t, seed, size = op
+            ks, _ = _batch_keys(seed, size)
+            store.delete_batch(t, ks, tick=False)
+            store.scheduler.tick()
+            for k in ks.tolist():
+                oracle[t][k] = None
+        elif kind == "lookup":
+            _, t, seed, size = op
+            rng = np.random.default_rng(seed)
+            ks = rng.integers(0, KEY_SPACE + 500, size=size)
+            found, vals = store.read_batch(t, ks)
+            for i, k in enumerate(ks.tolist()):
+                want = oracle[t].get(k)
+                assert bool(found[i]) == (want is not None), (t, k)
+                if want is not None:
+                    assert int(vals[i]) == want, (t, k)
+            outputs.append(("lookup", found.tolist(), vals.tolist()))
+        elif kind == "scan":
+            _, t, lo, width = op
+            n = store.scan(t, lo, width)
+            want = sum(1 for k, v in oracle[t].items()
+                       if lo <= k < lo + width and v is not None)
+            assert n == want, (t, lo, width)
+            outputs.append(("scan", n))
+        elif kind == "flush":
+            # per-shard twin of the forced single-tree flush
+            for sh in store.shards:
+                tree = sh.store.trees[op[1]]
+                if not tree.mem.is_empty():
+                    sh.store.scheduler.flush_tree(tree, trigger="mem")
+        elif kind == "tick":
+            store.scheduler.tick()
+        elif kind == "tune":
+            ctrl.tune_now()
+    return store, outputs, oracle
+
+
+def assert_conserved(store: ShardedStore):
+    """Cross-shard IOStats conservation: all shards account through ONE
+    shared Disk, so per-shard (per-tree) counter sums equal the global
+    counters bit-exactly."""
+    agg = store.shard_tree_stats()
+    st = store.disk.stats
+    assert sum(a["entries_written"] for a in agg) == st.entries_written
+    assert sum(a["bytes_flushed_mem"] for a in agg) == st.bytes_flushed_mem
+    assert sum(a["bytes_flushed_log"] for a in agg) == st.bytes_flushed_log
+    assert sum(a["merge_pages_written"] for a in agg) \
+        == st.pages_merge_written
+    assert sum(a["mem_bytes"] for a in agg) == store.write_memory_used()
+
+
+# --------------------------- shards=1 bit-identity ----------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("scheme", ["partitioned", "btree-dynamic",
+                                    "accordion-data"])
+def test_one_shard_bit_identical_to_lsmstore(seed, scheme):
+    from test_differential import replay
+    ops = gen_ops(np.random.default_rng(seed))
+    direct, out_d, _ = replay(ops, scheme=scheme)
+    sharded, out_s, _ = replay_sharded(ops, shards=1, scheme=scheme)
+    assert out_d == out_s
+    assert fingerprint(direct) == fingerprint(sharded.shards[0].store)
+    assert vars(direct.disk.stats) == vars(sharded.disk.stats)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_one_shard_bit_identical_both_backends(backend):
+    from test_differential import replay
+    ops = gen_ops(np.random.default_rng(9), n_ops=10)
+    direct, out_d, _ = replay(ops, backend=backend)
+    sharded, out_s, _ = replay_sharded(ops, shards=1, backend=backend)
+    assert out_d == out_s
+    assert fingerprint(direct) == fingerprint(sharded.shards[0].store)
+    assert vars(direct.disk.stats) == vars(sharded.disk.stats)
+
+
+@pytest.mark.parametrize("policy", ["mem", "opt"])
+def test_one_shard_bit_identical_across_policies(policy):
+    from test_differential import replay
+    ops = gen_ops(np.random.default_rng(17), n_ops=12)
+    direct, out_d, _ = replay(ops, policy=policy)
+    sharded, out_s, _ = replay_sharded(ops, shards=1, policy=policy)
+    assert out_d == out_s
+    assert fingerprint(direct) == fingerprint(sharded.shards[0].store)
+    assert vars(direct.disk.stats) == vars(sharded.disk.stats)
+
+
+# --------------------------- shards=N vs dict oracle --------------------------
+@pytest.mark.parametrize("shards", [2, 4])
+@pytest.mark.parametrize("seed", [3, 4])
+def test_sharded_matches_oracle_hash(shards, seed):
+    ops = gen_ops(np.random.default_rng(seed), n_ops=14)
+    store, _, _ = replay_sharded(ops, shards=shards)
+    assert_conserved(store)
+
+
+def test_sharded_matches_oracle_range_router():
+    ops = gen_ops(np.random.default_rng(6), n_ops=14)
+    router = ShardRouter.ranges(4, KEY_SPACE + 500)
+    store, _, _ = replay_sharded(ops, shards=4, router=router)
+    assert_conserved(store)
+
+
+def test_sharded_log_and_memory_enforced_globally():
+    """The arena's budgets are global: after any tick, total write memory
+    respects the shared threshold and the shared log respects its cap,
+    whichever shards the data landed on."""
+    ops = gen_ops(np.random.default_rng(12), n_ops=20)
+    store, _, _ = replay_sharded(ops, shards=4)
+    cfg = store.cfg
+    assert store.write_memory_used() \
+        <= cfg.mem_flush_threshold * store.write_memory_bytes + \
+        cfg.active_sstable_bytes * store.n_shards * len(TREES)
+    assert store.log_length <= cfg.max_log_bytes
+    assert store.log_pos == store.disk.stats.entries_written * cfg.entry_bytes
+
+
+# --------------------------- service over shards ------------------------------
+@pytest.mark.parametrize("shards", [1, 3])
+def test_service_over_sharded_store_matches_oracle(shards):
+    batches = gen_request_batches(np.random.default_rng(31), n_batches=8)
+    reset_sst_ids()
+    svc = StorageService(ShardedStore(small_config(), shards=shards),
+                         config=ServiceConfig(admission=False))
+    for t in TREES:
+        svc.create_tree(t)
+    oracle = {t: {} for t in TREES}
+    for reqs in batches:
+        results = svc.submit(reqs)
+        for req, res in zip(reqs, results):
+            assert not isinstance(res, Deferred)
+            kind = type(req).__name__
+            if kind == "Put":
+                vals = req.keys if req.vals is None else req.vals
+                oracle[req.tree].update(
+                    zip(req.keys.tolist(), vals.tolist()))
+            elif kind == "Delete":
+                for k in req.keys.tolist():
+                    oracle[req.tree][k] = None
+        # verify reads of this batch against the pre-batch+writes oracle
+        # indirectly: a full sweep after each batch keeps it simple
+    for t in TREES:
+        ks = np.arange(0, KEY_SPACE + 500)
+        found, vals = svc.store.read_batch(t, ks)
+        for k in ks.tolist():
+            want = oracle[t].get(k)
+            assert bool(found[k]) == (want is not None), (t, k)
+            if want is not None:
+                assert int(vals[k]) == want, (t, k)
+    if shards > 1:
+        assert_conserved(svc.store)
+
+
+def test_one_shard_service_bit_identical_to_direct_service():
+    batches = gen_request_batches(np.random.default_rng(33), n_batches=6)
+
+    def drive(store):
+        svc = StorageService(store, config=ServiceConfig(admission=False))
+        for t in TREES:
+            svc.create_tree(t)
+        out = []
+        for reqs in batches:
+            for res in svc.submit(reqs):
+                if hasattr(res, "found"):
+                    out.append((res.found.tolist(), res.vals.tolist()))
+                elif hasattr(res, "count"):
+                    out.append(res.count)
+        return svc, out
+
+    reset_sst_ids()
+    svc_d, out_d = drive(LSMStore(small_config()))
+    reset_sst_ids()
+    svc_s, out_s = drive(ShardedStore(small_config(), shards=1))
+    assert out_d == out_s
+    assert fingerprint(svc_d.store) == fingerprint(svc_s.store.shards[0].store)
+    assert vars(svc_d.store.disk.stats) == vars(svc_s.store.disk.stats)
+
+
+def test_hot_shard_stall_defers_only_hot_keys():
+    """Admission gates per (tree, shard): an L0 pile-up on the hot shard
+    defers exactly the keys routed there -- the Deferred carries the
+    narrowed request -- while the cold shard's keys execute."""
+    reset_sst_ids()
+    cfg = small_config()
+    store = ShardedStore(cfg, router=ShardRouter.ranges(2, KEY_SPACE))
+    svc = StorageService(store, config=ServiceConfig(admission=True))
+    svc.create_tree("a")
+    hot = store.shard_tree(0, "a")
+    for _ in range(cfg.l0_max_groups):    # overlapping full flushes: one
+        ks = np.arange(0, 900)            # new L0 group each round
+        store.shards[0].store.write_batch("a", ks, ks + 1, tick=False)
+        store.shards[0].store.scheduler.flush_tree(
+            hot, trigger="mem", forced_kind="full")
+    assert hot.l0.num_groups >= cfg.l0_max_groups
+    assert svc.stalled_trees() == ["a@0"]
+    keys = np.array([10, 1500, 20, 1600])          # 2 hot, 2 cold
+    res = svc.submit([Put("a", keys, keys + 5)])
+    assert isinstance(res[0], Deferred) and res[0].reason == "l0-stall"
+    assert sorted(res[0].request.keys.tolist()) == [10, 20]
+    found, vals = store.read_batch("a", np.array([1500, 1600]))
+    assert found.all() and vals.tolist() == [1505, 1605]
+    # drain + retry of the narrowed request completes the write
+    out = svc.submit_all([res[0].request])
+    assert isinstance(out[0], WriteAck)
+    found, vals = store.read_batch("a", keys)
+    assert found.all() and vals.tolist() == (keys + 5).tolist()
+
+    # submit_all of a FULL request that partially defers mid-flight must
+    # ack the original key count, not the retried remainder
+    for _ in range(cfg.l0_max_groups):        # rebuild the hot-shard stall
+        ks = np.arange(0, 900)
+        store.shards[0].store.write_batch("a", ks, ks + 1, tick=False)
+        store.shards[0].store.scheduler.flush_tree(
+            hot, trigger="mem", forced_kind="full")
+    assert svc.stalled_trees() == ["a@0"]
+    out = svc.submit_all([Put("a", keys, keys + 9)])
+    assert isinstance(out[0], WriteAck) and out[0].n == len(keys)
+    found, vals = store.read_batch("a", keys)
+    assert found.all() and vals.tolist() == (keys + 9).tolist()
+
+
+# --------------------------- router properties --------------------------------
+@pytest.mark.parametrize("router", [
+    ShardRouter(1),
+    ShardRouter(4),
+    ShardRouter(7),
+    ShardRouter.ranges(4, KEY_SPACE),
+    ShardRouter(3, kind="range", boundaries=(-50, 1000)),
+])
+def test_router_partitions_every_key(router):
+    rng = np.random.default_rng(0)
+    keys = rng.integers(-(2**40), 2**40, size=5000)
+    sid = router.shard_of_batch(keys)
+    assert sid.shape == keys.shape
+    assert ((sid >= 0) & (sid < router.n_shards)).all()
+    # split() yields ascending, disjoint position sets covering the batch
+    pieces = list(router.split(keys))
+    all_pos = np.concatenate([sel for _, sel in pieces])
+    assert len(all_pos) == len(keys)
+    assert np.array_equal(np.sort(all_pos), np.arange(len(keys)))
+    for si, sel in pieces:
+        assert (np.diff(sel) > 0).all() or len(sel) == 1
+        assert (sid[sel] == si).all()
+    # scalar routing agrees with the batch
+    for k in keys[:64].tolist():
+        assert router.shard_of(k) == sid[np.flatnonzero(keys == k)[0]]
+
+
+def test_router_degenerate_single_shard():
+    """Both disciplines, including ``ranges(1, ...)``, route everything
+    to shard 0 when n_shards == 1."""
+    keys = np.array([-10, 0, 999, 10**12])
+    for r in (ShardRouter(1), ShardRouter.ranges(1, 1000)):
+        assert r.shard_of_batch(keys).tolist() == [0, 0, 0, 0]
+
+
+def test_router_range_boundaries():
+    r = ShardRouter(3, kind="range", boundaries=(100, 200))
+    # half-open [b_{i-1}, b_i) buckets: a boundary key opens the next shard
+    assert r.shard_of(-5) == 0 and r.shard_of(99) == 0
+    assert r.shard_of(100) == 1 and r.shard_of(199) == 1
+    assert r.shard_of(200) == 2 and r.shard_of(10**9) == 2
+    with pytest.raises(ValueError):
+        ShardRouter(3, kind="range", boundaries=(5,))
+    with pytest.raises(ValueError):
+        ShardRouter(3, kind="range", boundaries=(200, 100))
+    with pytest.raises(ValueError):
+        ShardRouter(2, kind="hash", boundaries=(1,))
+    with pytest.raises(ValueError):
+        ShardRouter(0)
+    with pytest.raises(ValueError):
+        ShardRouter(2, kind="modulo")
+
+
+def test_router_deterministic_across_processes():
+    """Routing must not depend on process state (e.g. hash() salting): a
+    fresh interpreter computes the identical placement."""
+    keys = (np.arange(-3000, 3000, dtype=np.int64) * 2654435761) % (2**50)
+    local = ShardRouter(5).shard_of_batch(keys)
+    digest = int(np.sum(local * np.arange(len(keys), dtype=np.int64)))
+    code = (
+        "import numpy as np\n"
+        "from repro.core.shard import ShardRouter\n"
+        "keys = (np.arange(-3000, 3000, dtype=np.int64) * 2654435761)"
+        " % (2**50)\n"
+        "sid = ShardRouter(5).shard_of_batch(keys)\n"
+        "print(int(np.sum(sid * np.arange(len(keys), dtype=np.int64))))\n")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, check=True)
+    assert int(out.stdout.strip()) == digest
+
+
+# --------------------------- hypothesis suite ---------------------------------
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(-2**62, 2**62 - 1), min_size=1,
+                    max_size=200),
+           st.integers(1, 9))
+    def test_hypothesis_router_partition(keys, n_shards):
+        router = ShardRouter(n_shards)
+        keys = np.array(keys, np.int64)
+        sid = router.shard_of_batch(keys)
+        assert ((sid >= 0) & (sid < n_shards)).all()
+        pieces = list(router.split(keys))
+        got = np.concatenate([sel for _, sel in pieces]) if pieces else []
+        assert np.array_equal(np.sort(got), np.arange(len(keys)))
+        # same key -> same shard, wherever it appears in the batch
+        for si, sel in pieces:
+            assert (sid[sel] == si).all()
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 4))
+    def test_hypothesis_sharded_oracle(seed, shards):
+        ops = gen_ops(np.random.default_rng(seed), n_ops=8)
+        store, _, _ = replay_sharded(ops, shards=shards)
+        assert_conserved(store)
