@@ -1,0 +1,103 @@
+"""Beyond-paper: the write-memory / log-length / recovery-time tradeoff,
+end-to-end through the durability plane.
+
+The paper's §4 couples write-memory allocation to transaction-log length:
+more write memory means entries linger unflushed, the global min-LSN
+advances slowly, and the un-truncated log tail grows. This benchmark
+closes the loop the paper only argues: after a fixed zipf write workload
+on a sharded store, crash it (clone the durable WAL + manifest) and
+``recover`` -- measuring the retained log tail and the wall-clock replay
+time. Larger write memory -> longer tail -> longer replay; the
+``checkpoint_interval_bytes`` knob caps the tail regardless.
+
+Rows: ``recovery/write_mem_<MB>MB`` (value = replay seconds) with
+``log_tail_bytes`` / ``replay_time`` / ``replayed_records`` /
+``replayed_keys`` in the derived fields, plus one
+``recovery/checkpoint_interval`` row showing the knob bounding the tail.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.durability import recover
+from repro.core.lsm.sstable import reset_sst_ids
+from repro.core.lsm.storage import StoreConfig
+from repro.core.shard import ShardedStore
+
+from .common import BASE, KB, MB, fmt_row
+
+
+def _drive(cfg: StoreConfig, n_ops: int, shards: int) -> ShardedStore:
+    reset_sst_ids()
+    store = ShardedStore(cfg, shards=shards)
+    store.create_tree("kv")
+    rng = np.random.default_rng(7)
+    batch = 256
+    for _ in range(n_ops // batch):
+        u = rng.random(batch)
+        rank = np.floor(200_000 ** u).astype(np.int64)
+        keys = (rank * 2654435761) % 200_000
+        store.write_batch("kv", keys, keys + 1)
+    return store
+
+
+def _crash_recover(cfg: StoreConfig, store: ShardedStore) -> dict:
+    wal, manifest = store.wal.clone(), store.manifest.clone()
+    t0 = time.perf_counter()
+    recovered = recover(cfg, wal, manifest)
+    replay_time = time.perf_counter() - t0
+    info = recovered.recovery_info
+    # recovered state must agree with the crashed store (cheap guardrail;
+    # the differential suite proves bit-identity)
+    assert recovered.log_pos == store.log_pos
+    assert recovered.write_memory_used() == store.write_memory_used()
+    return {"replay_time": replay_time, **info}
+
+
+def run(full: bool = False, smoke: bool = False):
+    n_ops = 6_000 if smoke else 60_000
+    shards = 2
+    mem_points = ([1, 8] if smoke else [1, 2, 4, 16]) if not full \
+        else [1, 2, 4, 16, 32]
+    rows = []
+    for mem_mb in mem_points:
+        # max_log_bytes stays finite: past the growth region the log cap
+        # (log-triggered min-LSN flushes) bounds the tail -- the paper's
+        # own recovery-time bound
+        cfg = StoreConfig(**{**BASE,
+                             "write_memory_bytes": mem_mb * MB,
+                             "max_log_bytes": 8 * MB})
+        store = _drive(cfg, n_ops, shards)
+        r = _crash_recover(cfg, store)
+        rows.append(fmt_row(
+            f"recovery/write_mem_{mem_mb}MB", r["replay_time"],
+            f"scheme={cfg.scheme};shards={shards};write_mem_mb={mem_mb};"
+            f"log_tail_bytes={r['tail_bytes']};"
+            f"replay_bytes={r['replayed_bytes']};"
+            f"replay_time={r['replay_time']:.6g};"
+            f"replayed_records={r['replayed_records']};"
+            f"replayed_keys={r['replayed_keys']}"))
+    # the checkpoint-interval knob bounds the tail at the largest memory
+    mem_mb = mem_points[-1]
+    cfg = StoreConfig(**{**BASE,
+                         "write_memory_bytes": mem_mb * MB,
+                         "max_log_bytes": 8 * MB,
+                         "checkpoint_interval_bytes": 256 * KB})
+    store = _drive(cfg, n_ops, shards)
+    r = _crash_recover(cfg, store)
+    rows.append(fmt_row(
+        "recovery/checkpoint_interval", r["replay_time"],
+        f"scheme={cfg.scheme};shards={shards};write_mem_mb={mem_mb};"
+        f"ckpt_interval_kb=256;log_tail_bytes={r['tail_bytes']};"
+        f"replay_bytes={r['replayed_bytes']};"
+        f"replay_time={r['replay_time']:.6g};"
+        f"replayed_records={r['replayed_records']};"
+        f"replayed_keys={r['replayed_keys']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -55,19 +55,19 @@ def main() -> None:
                    fig11_dynamic_levels, fig12_multi_primary,
                    fig13_secondary, fig14_tpcc, fig15_tuner_ycsb,
                    fig16_tuner_accuracy, fig17_tuner_responsiveness,
-                   kv_serving)
+                   kv_serving, recovery)
     full = "--full" in sys.argv
     smoke = "--smoke" in sys.argv
     json_out = "--json" in sys.argv
     if smoke:
         modules = [fig07_single_tree, fig14_tpcc, fig15_tuner_ycsb,
-                   kv_serving]
+                   kv_serving, recovery]
     else:
         modules = [fig07_single_tree, fig08_memory_merge_overhead,
                    fig09_flush_heuristics, fig10_grouped_l0,
                    fig11_dynamic_levels, fig12_multi_primary, fig13_secondary,
                    fig14_tpcc, fig15_tuner_ycsb, fig16_tuner_accuracy,
-                   fig17_tuner_responsiveness, kv_serving]
+                   fig17_tuner_responsiveness, kv_serving, recovery]
     print("name,value,derived")
     for mod in modules:
         t0 = time.time()

@@ -29,6 +29,18 @@ A tick runs four phases:
      Unspent debt carries to the next tick (``carried_debt``), modelling
      bounded background-merge bandwidth; ``merge_budget=None`` (default)
      drains all debt every tick.
+  5. **WAL enforcement** -- the durable twin of phase 3: physically
+     truncate the write-ahead log below the arena-global min-LSN (the
+     bytes the min-LSN flushes just made dead), taking a durable
+     checkpoint first whenever the watermark would pass the last
+     checkpoint (or the ``checkpoint_interval_bytes`` knob demands one),
+     so the retained tail always suffices for bit-identical replay. After
+     every tick ``wal.tail_bytes == store.log_length``.
+
+Every tick is itself WAL-logged as a ``TickRecord`` *before* its phases
+run (write-ahead): ticks are pure functions of store state, so recovery
+re-runs them at the original trigger points and a crash mid-tick redoes
+the whole tick from its logged start.
 
 The scheduler holds no tree state of its own -- it reads candidates from
 the store each phase -- so ticks are a pure function of store state, which
@@ -42,6 +54,38 @@ from dataclasses import dataclass
 
 _INF = 2**62
 _UNSET = object()      # tick(): "no override" vs an explicit None (=drain)
+
+
+def _budget_tag(merge_budget):
+    """WAL encoding of a tick's merge-budget override."""
+    if merge_budget is _UNSET:
+        return "default"
+    if merge_budget is None:
+        return "drain"
+    return int(merge_budget)
+
+
+def enforce_wal(arena, scheduler) -> None:
+    """Phase 5 (shared by both schedulers): checkpoint if the min-LSN
+    watermark passed the last checkpoint (or the interval knob fired),
+    then truncate through the one shared path
+    (``durability.checkpoint.truncate_below_min_lsn``)."""
+    from ..durability.checkpoint import (global_min_lsn, take_checkpoint,
+                                         truncate_below_min_lsn)
+    wal, man, cfg = arena.wal, arena.manifest, arena.cfg
+    trunc = global_min_lsn(arena)
+    need = trunc > man.checkpoint_watermark
+    interval = cfg.checkpoint_interval_bytes
+    if interval is not None:
+        need = need or wal.head_lsn - man.checkpoint_watermark >= interval
+    if need:
+        # Replay determinism: a tick re-run during recovery sees exactly
+        # the state the original saw, and the original did not checkpoint
+        # here (the restored checkpoint is the latest one).
+        assert not wal.replaying, \
+            "checkpoint triggered during WAL replay (determinism bug)"
+        take_checkpoint(arena, scheduler)
+    truncate_below_min_lsn(arena)
 
 
 @dataclass
@@ -228,6 +272,8 @@ class MaintenanceScheduler:
         """One maintenance round over the whole store. ``merge_budget``
         overrides the scheduler's default for this tick only; pass an
         explicit ``None`` to drain all debt regardless of the default."""
+        arena = self.store.arena
+        arena.wal.append_tick(_budget_tag(merge_budget))
         self.ticks += 1
         rep = TickReport()
         rep.upkeep_steps = self._mem_upkeep()
@@ -240,6 +286,7 @@ class MaintenanceScheduler:
         budget = self.merge_budget if merge_budget is _UNSET else merge_budget
         rep.merge_steps = self._run_merges(budget)
         rep.carried_debt = self.carried_debt
+        enforce_wal(arena, self)
         return rep
 
 
@@ -394,6 +441,7 @@ class ShardedMaintenanceScheduler:
     def tick(self, *, merge_budget=_UNSET) -> TickReport:
         """One maintenance round over every shard (same override contract
         as ``MaintenanceScheduler.tick``)."""
+        self.arena.wal.append_tick(_budget_tag(merge_budget))
         self.ticks += 1
         rep = TickReport()
         for s in self.stores:
@@ -408,4 +456,5 @@ class ShardedMaintenanceScheduler:
         budget = self.merge_budget if merge_budget is _UNSET else merge_budget
         rep.merge_steps = self._run_merges(budget)
         rep.carried_debt = self.carried_debt
+        enforce_wal(self.arena, self)
         return rep

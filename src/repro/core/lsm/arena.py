@@ -5,24 +5,38 @@ the tuner can move memory to where the workload needs it. ``MemoryArena``
 is that pool as an object: it owns the tunable write-memory size ``x``,
 the clock buffer cache of ``total - x - sim`` pages, the ghost (simulated)
 cache feeding the tuner, the byte-accounted ``Disk`` (and therefore the
-global ``IOStats``), and the shared transaction log position.
+global ``IOStats``), and the *durability plane*: one typed
+``WriteAheadLog`` (the transaction log whose byte offsets are the LSNs)
+and one versioned ``Manifest`` (the durable record of on-disk SSTable
+state, carrying checkpoints).
 
 A standalone ``LSMStore`` creates a private arena; a ``ShardedStore``
 creates ONE arena and hands it to every shard, which is exactly how the
 paper's memory walls become *cross-shard* walls: all shards compete for
-the same write memory and buffer cache, and the governor/tuner arbitrates
-the boundary globally by resizing this arena.
+the same write memory and buffer cache, append to the same log, and the
+governor/tuner arbitrates the boundary globally by resizing this arena.
+Tuner/governor resizes are logged as control records so crash recovery
+can re-apply them by value.
+
+``log_pos`` remains the canonical name for the log's byte position --
+kept as a compat property over ``wal.head_lsn`` (the setter moves the WAL
+head without a payload record; observability-only, used by nothing in the
+engine itself).
 """
 from __future__ import annotations
 
+from ..durability.manifest import Manifest
+from ..durability.wal import WriteAheadLog
 from ..tuner.simcache import GhostCache
 from .cache import ClockCache, Disk
 
 
 class MemoryArena:
-    """Shared write-memory pool + buffer cache + log for member stores."""
+    """Shared write-memory pool + buffer cache + WAL/manifest for member
+    stores."""
 
-    def __init__(self, cfg):
+    def __init__(self, cfg, *, wal: WriteAheadLog | None = None,
+                 manifest: Manifest | None = None):
         self.cfg = cfg
         self.write_memory_bytes = cfg.write_memory_bytes
         self.ghost = GhostCache(cfg.sim_cache_bytes // cfg.page_bytes)
@@ -31,15 +45,33 @@ class MemoryArena:
                 - cfg.sim_cache_bytes) // cfg.page_bytes)
         self.cache = ClockCache(cache_pages, on_evict=self.ghost.add_evicted)
         self.disk = Disk(cfg.page_bytes, self.cache, self.ghost)
-        self.log_pos = 0                    # shared transaction-log offset
+        # Durability plane: adopted (recovery) or fresh. The manifest's
+        # identity guardrail rejects a config that contradicts the one the
+        # durable state was written under.
+        self.wal = wal if wal is not None else WriteAheadLog()
+        self.manifest = manifest if manifest is not None else Manifest()
+        self.manifest.bind(cfg)
         self.members: list = []             # stores drawing from this arena
 
-    def register(self, store) -> None:
+    def register(self, store) -> int:
+        """Add a member store; returns its index (== shard index for a
+        sharded store, 0 for a standalone one)."""
         self.members.append(store)
+        return len(self.members) - 1
 
     @property
     def stats(self):
         return self.disk.stats
+
+    @property
+    def log_pos(self) -> int:
+        """Transaction-log byte offset (compat name for ``wal.head_lsn``)."""
+        return self.wal.head_lsn
+
+    @log_pos.setter
+    def log_pos(self, v: int) -> None:
+        # Compat shim for the pre-WAL bare counter; see WriteAheadLog.set_head.
+        self.wal.set_head(v)
 
     def used_bytes(self) -> int:
         """Write memory held across every member store."""
@@ -47,11 +79,23 @@ class MemoryArena:
 
     def set_write_memory(self, x: int) -> None:
         """Apply a new write-memory size (the tuner's actuator): the
-        buffer cache gives up (or reclaims) the complementary pages."""
+        buffer cache gives up (or reclaims) the complementary pages. The
+        applied value is WAL-logged so recovery replays the decision."""
         cfg = self.cfg
         x = int(min(max(x, 1 << 20), cfg.total_memory_bytes
                     - cfg.sim_cache_bytes - (1 << 20)))
         self.write_memory_bytes = x
         pages = max(0, (cfg.total_memory_bytes - x - cfg.sim_cache_bytes)
                     // cfg.page_bytes)
+        self.cache.resize(pages)
+        self.wal.append_set_write_memory(x)
+
+    def restore_write_memory(self, x: int) -> None:
+        """Checkpoint restore: re-apply a captured write-memory size
+        verbatim (it was either the config value or a past
+        ``set_write_memory`` result, so it is already clamped -- clamping
+        again would move a below-floor config value)."""
+        self.write_memory_bytes = int(x)
+        pages = max(0, (self.cfg.total_memory_bytes - x
+                        - self.cfg.sim_cache_bytes) // self.cfg.page_bytes)
         self.cache.resize(pages)

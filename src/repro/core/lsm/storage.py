@@ -81,6 +81,12 @@ class StoreConfig:
     active_sstable_bytes: int = 1 << 20        # scaled-down 32MB
     sstable_bytes: int = 2 << 20               # disk SSTable partition target
     max_log_bytes: int = 256 << 20
+    # Force a durable checkpoint whenever the WAL head has advanced this
+    # many bytes past the last checkpoint's watermark, bounding the replay
+    # tail (and therefore recovery time) independently of flush activity.
+    # None = checkpoint only when log truncation requires one (the min-LSN
+    # watermark passing the last checkpoint).
+    checkpoint_interval_bytes: int | None = None
     mem_flush_threshold: float = 0.95
     scheme: str = "partitioned"
     flush_policy: str = "opt"                  # mem | lsn | opt
@@ -125,6 +131,16 @@ class StoreConfig:
             raise ValueError(
                 f"merge_budget must be >= 0 (or None to drain all debt "
                 f"every tick), got {self.merge_budget}")
+        if self.max_log_bytes <= 0:
+            raise ValueError(
+                f"max_log_bytes must be positive (the transaction-log cap "
+                f"that triggers min-LSN flushes), got {self.max_log_bytes}")
+        if self.checkpoint_interval_bytes is not None \
+                and self.checkpoint_interval_bytes <= 0:
+            raise ValueError(
+                f"checkpoint_interval_bytes must be positive (or None to "
+                f"checkpoint only when log truncation requires it), got "
+                f"{self.checkpoint_interval_bytes}")
         if self.write_memory_bytes + self.sim_cache_bytes \
                 > self.total_memory_bytes:
             raise ValueError(
@@ -143,7 +159,7 @@ class LSMStore:
         self.cfg = cfg.validate()
         self.backend = get_backend(cfg.backend)
         self.arena = arena if arena is not None else MemoryArena(cfg)
-        self.arena.register(self)
+        self.shard_id = self.arena.register(self)
         self.ghost = self.arena.ghost
         self.cache = self.arena.cache
         self.disk = self.arena.disk
@@ -187,8 +203,13 @@ class LSMStore:
             l0_greedy=cfg.l0_greedy, l0_grouped=cfg.l0_grouped,
             dynamic_levels=cfg.dynamic_levels,
             static_num_levels=cfg.static_num_levels,
-            backend=self.backend)
+            backend=self.backend,
+            manifest=self.arena.manifest, shard_id=self.shard_id)
         self.trees[name] = tree
+        # Schema record: one TreeCreate per logical tree (the WAL dedups
+        # the per-shard creates of a sharded store).
+        self.arena.wal.append_tree_create(name, dataset=dataset,
+                                          entry_bytes=entry_bytes)
         ds = dataset or name
         self.datasets.setdefault(ds, []).append(name)
         self.tree_dataset[name] = ds
@@ -226,14 +247,37 @@ class LSMStore:
         """Apply a new write-memory size (tuner's actuator)."""
         self.arena.set_write_memory(x)
 
+    # -- durability plane -------------------------------------------------------
+    @property
+    def wal(self):
+        """The (possibly shared) typed write-ahead log."""
+        return self.arena.wal
+
+    @property
+    def manifest(self):
+        """The (possibly shared) versioned manifest."""
+        return self.arena.manifest
+
+    def checkpoint(self):
+        """Force a durable checkpoint now and truncate the WAL below the
+        global min-LSN. The scheduler also checkpoints automatically when
+        truncation or ``checkpoint_interval_bytes`` requires one."""
+        from ..durability.checkpoint import checkpoint_now
+        return checkpoint_now(self.arena, self.scheduler)
+
     # -- write path ------------------------------------------------------------------
     def _ingest(self, tree_name: str, keys, vals, *, op: bool,
-                tick: bool) -> None:
+                tick: bool, delete: bool = False) -> None:
         tree = self.trees[tree_name]
-        lsn0 = self.log_pos
+        # Write-ahead: the batch is logged (assigning lsn0 = the current
+        # log position and advancing the head by the payload bytes) before
+        # it touches the memory component. During crash-recovery replay
+        # the same call hands back the record's original LSN instead.
+        lsn0 = self.arena.wal.append_batch(
+            tree_name, keys, None if delete else vals,
+            entry_bytes=tree.entry_bytes, op=op, delete=delete)
         tree.write_batch(keys, vals, lsn0)
         nbytes = len(keys) * tree.entry_bytes
-        self.log_pos += nbytes
         self.disk.stats.entries_written += len(keys)
         if op:
             self.disk.stats.ops += len(keys)
@@ -280,7 +324,7 @@ class LSMStore:
         keys = np.asarray(keys, np.int64)
         self._ingest(tree_name, keys,
                      np.full(len(keys), TOMBSTONE, np.int64),
-                     op=op, tick=tick)
+                     op=op, tick=tick, delete=True)
 
     def note_ops(self, n: int = 1) -> None:
         self.disk.stats.ops += n

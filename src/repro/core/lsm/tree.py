@@ -46,10 +46,15 @@ class LSMTree:
                  l0_grouped: bool = True,
                  dynamic_levels: bool = True,
                  static_num_levels: int | None = None,
-                 backend=None):
+                 backend=None,
+                 manifest=None, shard_id: int = 0):
         self.name = name
         self.backend = backend or get_backend()
         self.disk = disk
+        # Durability: every on-disk SSTable this tree writes or retires is
+        # recorded as a versioned manifest edit (None for bare fixtures).
+        self.manifest = manifest
+        self.shard_id = shard_id
         self.entry_bytes = entry_bytes
         self.mem = mem_component
         self.sstable_bytes = sstable_bytes
@@ -85,6 +90,15 @@ class LSMTree:
     def disk_bytes(self) -> int:
         return self.levels.total_bytes + self.l0.total_bytes
 
+    # -- durability hooks -------------------------------------------------------
+    def _manifest_add(self, sst, kind: str) -> None:
+        if self.manifest is not None:
+            self.manifest.add_sstable(self.shard_id, self.name, sst, kind)
+
+    def _manifest_remove(self, sst) -> None:
+        if self.manifest is not None:
+            self.manifest.remove_sstable(self.shard_id, self.name, sst)
+
     # -- write path -------------------------------------------------------------
     def write_batch(self, keys, vals, lsn0: int) -> None:
         """Batched ingest into the memory component (one backend sort+dedup
@@ -117,6 +131,7 @@ class LSMTree:
                                      self.entry_bytes, self.disk.page_bytes,
                                      self.sstable_bytes):
                 self.disk.write_sst(sst, flush=True)
+                self._manifest_add(sst, "flush")
                 self.l0.insert(sst)
                 total += sst.size_bytes
         if trigger == "mem":
@@ -171,6 +186,7 @@ class LSMTree:
                              self.disk.page_bytes, self.sstable_bytes)
         for sst in outs:
             self.disk.write_sst(sst, flush=False)
+            self._manifest_add(sst, "merge")
             self.stats.merge_pages_written += sst.num_pages + sst.bloom_pages()
         return outs
 
@@ -226,6 +242,7 @@ class LSMTree:
         self.l0.remove(l0_tables)
         for t in read:
             self.disk.drop_sst(t)
+            self._manifest_remove(t)
         return True
 
     def merge_level_once(self, i: int) -> None:
@@ -244,6 +261,7 @@ class LSMTree:
         self.levels.remove_from(i, [victim])
         for t in [victim] + olds:
             self.disk.drop_sst(t)
+            self._manifest_remove(t)
 
     def _l0_needs_merge(self, write_mem_share: float) -> bool:
         l0_bytes_budget = max(write_mem_share, 4 * self.sstable_bytes)

@@ -50,7 +50,8 @@ class ShardedStore:
     ``StorageService`` front door."""
 
     def __init__(self, cfg: StoreConfig, *, shards: int | None = None,
-                 router: ShardRouter | None = None):
+                 router: ShardRouter | None = None,
+                 wal=None, manifest=None):
         if router is None:
             router = ShardRouter(1 if shards is None else int(shards))
         elif shards is not None and router.n_shards != int(shards):
@@ -59,7 +60,13 @@ class ShardedStore:
                 f"{router.n_shards}; pass one or make them match")
         self.cfg = cfg.validate()
         self.router = router
-        self.arena = MemoryArena(cfg)
+        # ``wal``/``manifest`` adopt an existing durability plane (crash
+        # recovery); by default the arena creates a fresh one. The router
+        # spec is recorded in the manifest: replaying the ONE shared log
+        # re-partitions keys through the identical deterministic router.
+        self.arena = MemoryArena(cfg, wal=wal, manifest=manifest)
+        self.arena.manifest.set_router(
+            (router.kind, router.n_shards, router.boundaries))
         # Every shard shares the SAME StoreConfig instance, so a governor
         # flipping cfg.flush_policy steers all shards at once.
         self.shards = [StorageShard(i, LSMStore(cfg, arena=self.arena))
@@ -68,6 +75,7 @@ class ShardedStore:
             [sh.store for sh in self.shards], self.arena,
             merge_budget=cfg.merge_budget)
         self._trees_view: dict | None = None    # cached flat observer view
+        self.recovery_info: dict | None = None  # set by durability.recover
 
     # -- geometry / shared-state views -----------------------------------------
     @property
@@ -89,6 +97,22 @@ class ShardedStore:
     @property
     def log_pos(self) -> int:
         return self.arena.log_pos
+
+    @property
+    def wal(self):
+        """The ONE shared write-ahead log all shards append to."""
+        return self.arena.wal
+
+    @property
+    def manifest(self):
+        """The shared versioned manifest (SSTable edits + checkpoints)."""
+        return self.arena.manifest
+
+    def checkpoint(self):
+        """Force a durable checkpoint now and truncate the WAL below the
+        global min-LSN (the scheduler also checkpoints automatically)."""
+        from ..durability.checkpoint import checkpoint_now
+        return checkpoint_now(self.arena, self.scheduler)
 
     @property
     def write_memory_bytes(self) -> int:

@@ -1,0 +1,695 @@
+"""Durability plane: WAL round-trips, checkpointed manifests, and the
+differential crash-recovery contract.
+
+The load-bearing invariant: crash at ANY batch boundary of a random mixed
+workload -> ``recover(cfg, wal, manifest)`` -> the rebuilt store is
+*bit-identical* to the uncrashed store at that boundary -- memory-component
+structure, L0 groups, disk levels, ``log_pos``, write-memory size, and the
+write-path IOStats counters (``RECOVERY_EXACT_COUNTERS``) -- and continuing
+the workload on the recovered store reproduces the uncrashed run's
+subsequent read/scan results and final state exactly. Verified for
+shards in {1, 4} on the session backend (CI runs numpy and
+pallas-interpret via ``REPRO_LSM_BACKEND``).
+
+Also here: the WAL record encode/decode round-trip property (hypothesis-
+driven when available), physical-truncation invariants (``tail_bytes ==
+log_length`` after every tick), the crash-mid-maintenance redo case, and
+the service-level proof that ``Deferred`` writes never reach the log.
+"""
+import numpy as np
+import pytest
+
+from repro.core.durability import (RECOVERY_EXACT_COUNTERS,
+                                   DeleteBatchRecord, TickRecord,
+                                   TreeCreateRecord, WriteAheadLog,
+                                   WriteBatchRecord, decode_record,
+                                   encode_record, recover)
+from repro.core.durability.wal import SetWriteMemoryRecord
+from repro.core.lsm.sstable import reset_sst_ids
+from repro.core.lsm.storage import LSMStore, StoreConfig
+from repro.core.service import (Deferred, Put, ServiceConfig,
+                                StorageService)
+from repro.core.shard import ShardedStore, ShardRouter
+
+from test_differential import KB, MB, fingerprint
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+TREES = ("a", "b")
+KEY_SPACE = 2000
+
+
+def small_config(**kw):
+    base = dict(
+        total_memory_bytes=32 * MB, write_memory_bytes=256 * KB,
+        sim_cache_bytes=1 * MB, page_bytes=4 * KB, entry_bytes=256,
+        active_sstable_bytes=32 * KB, sstable_bytes=64 * KB,
+        # tight log cap: log-triggered (min-LSN) flushes and physical
+        # truncation fire within the small test workloads
+        max_log_bytes=512 * KB, scheme="partitioned", flush_policy="lsn")
+    base.update(kw)
+    return StoreConfig(**base)
+
+
+def sharded_fingerprint(store: ShardedStore):
+    return [fingerprint(sh.store) for sh in store.shards]
+
+
+def exact_counters(store) -> dict:
+    return {k: getattr(store.disk.stats, k)
+            for k in RECOVERY_EXACT_COUNTERS}
+
+
+# --------------------------- WAL record round-trip -----------------------------
+def _roundtrip(rec):
+    out = decode_record(encode_record(rec))
+    assert type(out) is type(rec)
+    return out
+
+
+def test_wal_record_roundtrip_fixed():
+    w = WriteBatchRecord("tree-x", 4096, 256,
+                         np.array([5, -3, 2**40], np.int64),
+                         np.array([1, 2, 3], np.int64), op=True)
+    out = _roundtrip(w)
+    assert out.tree == "tree-x" and out.lsn0 == 4096
+    assert out.entry_bytes == 256 and out.op is True
+    np.testing.assert_array_equal(out.keys, w.keys)
+    np.testing.assert_array_equal(out.vals, w.vals)
+    assert out.lsn_end == 4096 + 3 * 256
+
+    d = DeleteBatchRecord("t", 0, 128, np.array([], np.int64), op=False)
+    out = _roundtrip(d)
+    assert len(out.keys) == 0 and out.op is False and out.lsn_end == 0
+
+    for tc in (TreeCreateRecord("orders", dataset="ds", entry_bytes=512),
+               TreeCreateRecord("orders", dataset=None, entry_bytes=None)):
+        out = _roundtrip(tc)
+        assert (out.tree, out.dataset, out.entry_bytes) \
+            == (tc.tree, tc.dataset, tc.entry_bytes)
+
+    for budget in ("default", "drain", 0, 7):
+        out = _roundtrip(TickRecord(lsn0=99, merge_budget=budget))
+        assert out.merge_budget == budget and out.lsn0 == 99
+
+    out = _roundtrip(SetWriteMemoryRecord(write_memory_bytes=1 << 22,
+                                          lsn0=10))
+    assert out.write_memory_bytes == 1 << 22
+
+
+if HAVE_HYPOTHESIS:
+    key_arrays = st.lists(st.integers(-2**62, 2**62 - 1),
+                          max_size=64).map(lambda v: np.array(v, np.int64))
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.text(max_size=24).filter(lambda s: "\x00" not in s),
+           st.integers(0, 2**50), st.integers(1, 4096), key_arrays,
+           key_arrays, st.booleans(), st.booleans())
+    def test_hypothesis_wal_batch_roundtrip(tree, lsn0, entry_bytes,
+                                            keys, vals, op, delete):
+        """Encode/decode is identity for arbitrary key/val batches --
+        including empty-val delete records and empty batches."""
+        if delete:
+            rec = DeleteBatchRecord(tree, lsn0, entry_bytes, keys, op=op)
+        else:
+            vals = np.resize(vals, keys.shape) if len(keys) else keys
+            rec = WriteBatchRecord(tree, lsn0, entry_bytes, keys, vals,
+                                   op=op)
+        out = _roundtrip(rec)
+        assert out.tree == tree and out.lsn0 == lsn0
+        assert out.entry_bytes == entry_bytes and out.op == op
+        np.testing.assert_array_equal(out.keys, keys)
+        if not delete:
+            np.testing.assert_array_equal(out.vals, rec.vals)
+        assert out.lsn_end == lsn0 + len(keys) * entry_bytes
+
+
+# --------------------------- config validation ---------------------------------
+def test_validate_rejects_bad_durability_knobs():
+    with pytest.raises(ValueError, match="max_log_bytes"):
+        small_config(max_log_bytes=0).validate()
+    with pytest.raises(ValueError, match="max_log_bytes"):
+        small_config(max_log_bytes=-4096).validate()
+    with pytest.raises(ValueError, match="checkpoint_interval_bytes"):
+        small_config(checkpoint_interval_bytes=0).validate()
+    with pytest.raises(ValueError, match="checkpoint_interval_bytes"):
+        small_config(checkpoint_interval_bytes=-1).validate()
+    # valid values still pass
+    small_config(checkpoint_interval_bytes=1 * MB).validate()
+    small_config(checkpoint_interval_bytes=None).validate()
+
+
+# --------------------------- workload driver -----------------------------------
+def gen_batches(seed, n_batches=25):
+    """Deterministic mixed workload: per-batch op specs, replayable from
+    any boundary. Write-path ops drive the durable state; reads/scans
+    interleave to pin result-identity (they are volatile by design)."""
+    rng = np.random.default_rng(seed)
+    batches = []
+    for _ in range(n_batches):
+        r = rng.random()
+        tree = TREES[int(rng.integers(0, len(TREES)))]
+        seed2 = int(rng.integers(0, 2**31))
+        size = int(rng.integers(60, 260))
+        if r < 0.45:
+            batches.append(("write", tree, seed2, size))
+        elif r < 0.60:
+            batches.append(("delete", tree, seed2, max(10, size // 3)))
+        elif r < 0.75:
+            batches.append(("lookup", tree, seed2, size))
+        elif r < 0.85:
+            batches.append(("scan", tree, int(rng.integers(0, KEY_SPACE)),
+                            int(rng.integers(10, 400))))
+        elif r < 0.95:
+            batches.append(("tick",))
+        else:
+            # keep the pool small enough that flushes (and so min-LSN
+            # advancement + log truncation) keep happening
+            batches.append(("setmem", int(rng.integers(256, 640)) * KB))
+    return batches
+
+
+def apply_batch(store, batch, oracle, outputs):
+    kind = batch[0]
+    if kind == "write":
+        _, t, seed, size = batch
+        rng = np.random.default_rng(seed)
+        ks = rng.integers(0, KEY_SPACE, size)
+        vs = rng.integers(0, 2**31, size)
+        store.write_batch(t, ks, vs)
+        oracle[t].update(zip(ks.tolist(), vs.tolist()))
+    elif kind == "delete":
+        _, t, seed, size = batch
+        ks = np.random.default_rng(seed).integers(0, KEY_SPACE, size)
+        store.delete_batch(t, ks)
+        for k in ks.tolist():
+            oracle[t][k] = None
+    elif kind == "lookup":
+        _, t, seed, size = batch
+        ks = np.random.default_rng(seed).integers(0, KEY_SPACE + 500, size)
+        found, vals = store.read_batch(t, ks)
+        for i, k in enumerate(ks.tolist()):
+            want = oracle[t].get(k)
+            assert bool(found[i]) == (want is not None), (t, k)
+            if want is not None:
+                assert int(vals[i]) == want, (t, k)
+        outputs.append(("lookup", found.tolist(), vals.tolist()))
+    elif kind == "scan":
+        _, t, lo, width = batch
+        n = store.scan(t, lo, width)
+        want = sum(1 for k, v in oracle[t].items()
+                   if lo <= k < lo + width and v is not None)
+        assert n == want, (t, lo, width)
+        outputs.append(("scan", n))
+    elif kind == "tick":
+        store.scheduler.tick()
+    elif kind == "setmem":
+        store.set_write_memory(batch[1])
+    else:                                         # pragma: no cover
+        raise AssertionError(batch)
+
+
+def run_workload(cfg, batches, *, shards, crash_after=None,
+                 checkpoint_interval=None):
+    """Drive ``batches`` on a fresh sharded store; returns the store plus
+    per-boundary durable snapshots (WAL/manifest clones), fingerprints and
+    counters when ``crash_after is None``, or just the store driven up to
+    boundary ``crash_after``."""
+    if checkpoint_interval is not None:
+        cfg = StoreConfig(**{**vars(cfg),
+                             "checkpoint_interval_bytes": checkpoint_interval})
+    reset_sst_ids()
+    store = ShardedStore(cfg, shards=shards)
+    for t in TREES:
+        store.create_tree(t)
+    oracle = {t: {} for t in TREES}
+    outputs: list = []
+    snaps = []
+    for bi, batch in enumerate(batches):
+        apply_batch(store, batch, oracle, outputs)
+        if crash_after is None:
+            snaps.append({
+                "wal": store.wal.clone(),
+                "manifest": store.manifest.clone(),
+                "fp": sharded_fingerprint(store),
+                "counters": exact_counters(store),
+                "log_pos": store.log_pos,
+                "log_length": store.log_length,
+            })
+        if crash_after is not None and bi == crash_after:
+            break
+    return store, oracle, outputs, snaps
+
+
+# --------------------------- crash-point matrix --------------------------------
+@pytest.mark.parametrize("shards", [1, 4])
+def test_crash_recovery_matrix(shards):
+    """Crash at EVERY batch boundary of a ~200-op mixed oracle workload:
+    the recovered store must be bit-identical (structure + exact counters
+    + log position) to the uncrashed store at that boundary, with the WAL
+    physically truncated (tail == log_length) throughout."""
+    cfg = small_config()
+    batches = gen_batches(seed=11, n_batches=25)
+    # ~200+ logical write-path ops across the batches
+    assert sum(b[3] for b in batches if b[0] in ("write", "delete")) >= 200
+    store, oracle, _, snaps = run_workload(cfg, batches, shards=shards)
+    truncations = 0
+    for bi, snap in enumerate(snaps):
+        # physical truncation invariant at every batch boundary: the WAL's
+        # retained tail is exactly the paper's log_length
+        assert snap["wal"].tail_bytes == snap["log_length"], f"boundary {bi}"
+        recovered = recover(cfg, snap["wal"], snap["manifest"])
+        assert recovered.n_shards == shards
+        assert sharded_fingerprint(recovered) == snap["fp"], f"boundary {bi}"
+        assert exact_counters(recovered) == snap["counters"], f"boundary {bi}"
+        assert recovered.log_pos == snap["log_pos"]
+        truncations += snap["wal"].truncated_to > 0
+    # the scheduler's log enforcement actually truncated along the way
+    assert truncations > 0
+    # live-store invariant after the full run: tail == log_length
+    assert store.wal.tail_bytes == store.log_length
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_crash_recovery_continuation_bit_identical(shards):
+    """Recover at a few crash points, then continue the remaining
+    workload on the recovered store: subsequent read/scan results and the
+    final structural state must equal the uncrashed run's exactly."""
+    cfg = small_config()
+    batches = gen_batches(seed=29, n_batches=22)
+    full_store, _, full_outputs, snaps = run_workload(cfg, batches,
+                                                      shards=shards)
+    final_fp = sharded_fingerprint(full_store)
+    for crash_at in (0, len(batches) // 2, len(batches) - 2):
+        snap = snaps[crash_at]
+        recovered = recover(cfg, snap["wal"], snap["manifest"])
+        # rebuild the oracle as of the crash point, then continue
+        oracle = {t: {} for t in TREES}
+        outputs: list = []
+        for b in batches[:crash_at + 1]:
+            _replay_oracle_only(b, oracle, outputs)
+        for b in batches[crash_at + 1:]:
+            apply_batch(recovered, b, oracle, outputs)
+        assert outputs == full_outputs, f"crash at {crash_at}"
+        assert sharded_fingerprint(recovered) == final_fp, \
+            f"crash at {crash_at}"
+        assert exact_counters(recovered) == exact_counters(full_store), \
+            f"crash at {crash_at}"
+
+
+def _replay_oracle_only(batch, oracle, outputs):
+    """Advance the oracle (and expected read outputs) without a store:
+    the pre-crash prefix of the workload, whose reads the crashed store
+    already answered."""
+    kind = batch[0]
+    if kind == "write":
+        _, t, seed, size = batch
+        rng = np.random.default_rng(seed)
+        ks = rng.integers(0, KEY_SPACE, size)
+        vs = rng.integers(0, 2**31, size)
+        oracle[t].update(zip(ks.tolist(), vs.tolist()))
+    elif kind == "delete":
+        _, t, seed, size = batch
+        ks = np.random.default_rng(seed).integers(0, KEY_SPACE, size)
+        for k in ks.tolist():
+            oracle[t][k] = None
+    elif kind == "lookup":
+        _, t, seed, size = batch
+        ks = np.random.default_rng(seed).integers(0, KEY_SPACE + 500, size)
+        found = [oracle[t].get(k) is not None for k in ks.tolist()]
+        vals = [oracle[t].get(k) or 0 for k in ks.tolist()]
+        outputs.append(("lookup", found, vals))
+    elif kind == "scan":
+        _, t, lo, width = batch
+        outputs.append(("scan", sum(
+            1 for k, v in oracle[t].items()
+            if lo <= k < lo + width and v is not None)))
+
+
+def test_recovered_store_can_crash_and_recover_again():
+    """A recovered store is a full citizen of the durability plane: it
+    keeps appending to the same WAL/manifest and recovers again."""
+    cfg = small_config()
+    batches = gen_batches(seed=5, n_batches=12)
+    _, oracle, _, snaps = run_workload(cfg, batches, shards=2)
+    snap = snaps[6]
+    rec1 = recover(cfg, snap["wal"], snap["manifest"])
+    oracle2 = {t: {} for t in TREES}
+    for b in batches[:7]:
+        _replay_oracle_only(b, oracle2, [])
+    for b in batches[7:]:
+        apply_batch(rec1, b, oracle2, [])
+    fp1 = sharded_fingerprint(rec1)
+    rec2 = recover(cfg, rec1.wal.clone(), rec1.manifest.clone())
+    assert sharded_fingerprint(rec2) == fp1
+    assert exact_counters(rec2) == exact_counters(rec1)
+
+
+# --------------------------- schemes / policies --------------------------------
+@pytest.mark.parametrize("scheme", ["btree-dynamic", "accordion-data"])
+def test_crash_recovery_other_schemes(scheme):
+    """Monolithic and Accordion memory components checkpoint/replay too."""
+    cfg = small_config(scheme=scheme, flush_policy="mem")
+    batches = gen_batches(seed=13, n_batches=16)
+    _, _, _, snaps = run_workload(cfg, batches, shards=2)
+    for bi in (3, 9, len(snaps) - 1):
+        snap = snaps[bi]
+        recovered = recover(cfg, snap["wal"], snap["manifest"])
+        assert sharded_fingerprint(recovered) == snap["fp"], f"boundary {bi}"
+        assert exact_counters(recovered) == snap["counters"]
+
+
+def test_crash_recovery_opt_policy_rate_windows():
+    """The OPT flush policy ranks victims by per-tree write-rate windows;
+    recovery must restore them (checkpoint) and rebuild them (replay) so
+    post-recovery flush decisions match."""
+    cfg = small_config(flush_policy="opt")
+    batches = gen_batches(seed=17, n_batches=18)
+    full_store, _, full_outputs, snaps = run_workload(cfg, batches, shards=1)
+    crash_at = len(batches) // 2
+    snap = snaps[crash_at]
+    recovered = recover(cfg, snap["wal"], snap["manifest"])
+    oracle = {t: {} for t in TREES}
+    outputs: list = []
+    for b in batches[:crash_at + 1]:
+        _replay_oracle_only(b, oracle, outputs)
+    for b in batches[crash_at + 1:]:
+        apply_batch(recovered, b, oracle, outputs)
+    assert outputs == full_outputs
+    assert sharded_fingerprint(recovered) == sharded_fingerprint(full_store)
+    # the OPT decision state itself round-tripped
+    live = full_store.shards[0].store
+    rec = recovered.shards[0].store
+    assert {n: list(w) for n, w in live._rate_win.items()} \
+        == {n: list(w) for n, w in rec._rate_win.items()}
+    assert live._share_ewma == rec._share_ewma
+
+
+# --------------------------- truncation / checkpoint ---------------------------
+def test_scheduler_truncation_physically_drops_records():
+    """Log enforcement is physical: after every tick the WAL's retained
+    tail equals ``log_length``, and records below min-LSN are gone."""
+    cfg = small_config(max_log_bytes=2 * MB)
+    reset_sst_ids()
+    store = ShardedStore(cfg, shards=2)
+    store.create_tree("a")
+    rng = np.random.default_rng(0)
+    dropped = False
+    for _ in range(60):
+        ks = rng.integers(0, KEY_SPACE, 300)
+        store.write_batch("a", ks, ks + 1)     # tick per batch
+        assert store.wal.tail_bytes == store.log_length
+        if store.wal.truncated_to > 0:
+            dropped = True
+            # every retained record ends above the truncation watermark
+            assert all(r.lsn_end > store.wal.truncated_to
+                       for r in store.wal.records())
+    assert dropped
+    # checkpoints were forced ahead of truncation: the tail above the
+    # latest checkpoint is always replayable
+    ck = store.manifest.latest_checkpoint
+    assert ck is not None and ck.watermark >= store.wal.truncated_to
+
+
+def test_checkpoint_interval_bounds_replay_tail():
+    """The checkpoint-interval knob caps the WAL replay tail (and so the
+    recovery time) independently of flush/truncation activity."""
+    cfg = small_config(max_log_bytes=64 * MB)    # log cap never binds
+    batches = [("write", "a", s, 100) for s in range(40)]
+
+    def replayed(interval):
+        reset_sst_ids()
+        c = StoreConfig(**{**vars(cfg),
+                           "checkpoint_interval_bytes": interval})
+        store = ShardedStore(c, shards=1)
+        store.create_tree("a")
+        oracle = {"a": {}, "b": {}}
+        for b in batches:
+            apply_batch(store, b, oracle, [])
+        rec = recover(c, store.wal.clone(), store.manifest.clone())
+        assert sharded_fingerprint(rec) == sharded_fingerprint(store)
+        return rec.recovery_info["replayed_records"]
+
+    unbounded = replayed(None)
+    bounded = replayed(256 * KB)
+    assert bounded < unbounded
+
+
+def test_crash_mid_maintenance_redoes_the_tick():
+    """Crash after a tick's flush emitted its manifest edits but before
+    WAL enforcement truncated: the tick is logged write-ahead, so
+    recovery redoes the WHOLE tick and lands on the completed-tick state
+    (manifest rebases to the checkpoint; the orphan edits are dropped)."""
+    cfg = small_config()
+    reset_sst_ids()
+    store = ShardedStore(cfg, shards=2)
+    store.create_tree("a")
+    rng = np.random.default_rng(4)
+    for _ in range(6):
+        store.write_batch("a", rng.integers(0, KEY_SPACE, 300),
+                          rng.integers(0, 2**31, 300))
+    # hand-run one tick: log it write-ahead, run the flush phases, then
+    # CRASH before the merge pass + WAL enforcement complete.
+    sch = store.scheduler
+    store.wal.append_tick("default")
+    sch.ticks += 1
+    for s in sch.stores:
+        s.scheduler._mem_upkeep()
+    sch._enforce_memory()
+    sch._enforce_log()      # manifest edits emitted; truncation NOT run
+    wal_c, man_c = store.wal.clone(), store.manifest.clone()
+    # reference: the same tick completes on the live store
+    sch._run_merges(sch.merge_budget)
+    from repro.core.engine.scheduler import enforce_wal
+    enforce_wal(store.arena, sch)
+    ref_fp = sharded_fingerprint(store)
+    # recovery from the mid-tick crash redoes the tick deterministically
+    recovered = recover(cfg, wal_c, man_c)
+    assert sharded_fingerprint(recovered) == ref_fp
+    assert exact_counters(recovered) == exact_counters(store)
+
+
+# --------------------------- WAL replay safety ---------------------------------
+def test_recover_rejects_wrong_router_and_config():
+    cfg = small_config()
+    reset_sst_ids()
+    store = ShardedStore(cfg, shards=4)
+    store.create_tree("a")
+    store.write_batch("a", np.arange(100), np.arange(100))
+    wal_c, man_c = store.wal.clone(), store.manifest.clone()
+    with pytest.raises((ValueError, RuntimeError)):
+        recover(cfg, wal_c, man_c, router=ShardRouter(3))
+    with pytest.raises(ValueError, match="manifest"):
+        recover(small_config(entry_bytes=512), store.wal.clone(),
+                store.manifest.clone())
+    # the undamaged pair still recovers
+    rec = recover(cfg, store.wal.clone(), store.manifest.clone())
+    assert sharded_fingerprint(rec) == sharded_fingerprint(store)
+
+
+def test_bare_lsmstore_recovers_as_one_shard_store():
+    """A standalone LSMStore's private arena carries the same durability
+    plane; its log recovers as the bit-identical one-shard store."""
+    reset_sst_ids()
+    cfg = small_config()
+    store = LSMStore(cfg)
+    store.create_tree("a", dataset="ds0")
+    store.create_tree("b", entry_bytes=128)
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        t = TREES[int(rng.integers(0, 2))]
+        ks = rng.integers(0, KEY_SPACE, 150)
+        store.write_batch(t, ks, ks + 7)
+    store.delete_batch("a", rng.integers(0, KEY_SPACE, 60))
+    recovered = recover(cfg, store.wal.clone(), store.manifest.clone())
+    assert recovered.n_shards == 1
+    assert fingerprint(store) == fingerprint(recovered.shards[0].store)
+    assert exact_counters(store) == exact_counters(recovered)
+    # schema round-tripped (datasets, per-tree entry bytes)
+    s = recovered.shards[0].store
+    assert s.tree_dataset == store.tree_dataset
+    assert s.trees["b"].entry_bytes == 128
+
+
+def test_control_records_at_watermark_survive_truncation():
+    """Regression: zero-LSN-span control records (SetWriteMemory, Tick)
+    logged at exactly the latest checkpoint's watermark are part of the
+    replay tail -- truncation must never drop them, or recovery silently
+    loses their effects (wrong write-memory size, missed ticks)."""
+    reset_sst_ids()
+    # monolithic component: memory enforcement flush is a FULL flush, so
+    # the post-checkpoint tick empties write memory entirely (min_lsn ->
+    # INF) with no new writes, landing trunc exactly on the watermark
+    cfg = small_config(total_memory_bytes=64 * MB,
+                       write_memory_bytes=4 * MB, max_log_bytes=64 * MB,
+                       scheme="btree-dynamic", flush_policy="mem")
+    store = ShardedStore(cfg, shards=1)
+    store.create_tree("a")
+    rng = np.random.default_rng(8)
+    for _ in range(8):
+        ks = rng.integers(0, 20_000, 1000)   # ~2MB buffered, no flushes
+        store.write_batch("a", ks, ks + 1)
+    assert store.write_memory_used() > 1 * MB
+    store.checkpoint()                       # watermark == head
+    store.set_write_memory(1 * MB)           # control record AT watermark
+    store.scheduler.tick()                   # full flush -> min_lsn=INF
+    store.scheduler.tick()                   # -> trunc == head == watermark
+    assert store.min_lsn() >= 2**62
+    assert store.wal.truncated_to == store.log_pos
+    assert store.write_memory_bytes == 1 * MB
+    recovered = recover(cfg, store.wal.clone(), store.manifest.clone())
+    assert recovered.write_memory_bytes == 1 * MB
+    assert sharded_fingerprint(recovered) == sharded_fingerprint(store)
+    assert exact_counters(recovered) == exact_counters(store)
+    assert recovered.scheduler.ticks == store.scheduler.ticks
+
+
+def test_tree_created_after_checkpoint_recovers_via_tail():
+    """A tree created after the last checkpoint exists only as a WAL
+    TreeCreate record; replay must rebuild it with its schema args."""
+    reset_sst_ids()
+    cfg = small_config()
+    store = ShardedStore(cfg, shards=2)
+    store.create_tree("a")
+    rng = np.random.default_rng(3)
+    for _ in range(20):     # flushes advance min-LSN -> forced checkpoint
+        ks = rng.integers(0, KEY_SPACE, 250)
+        store.write_batch("a", ks, ks + 1)
+    assert store.manifest.latest_checkpoint is not None
+    store.create_tree("late", dataset="dsl", entry_bytes=128)
+    store.write_batch("late", np.arange(50), np.arange(50) * 2)
+    rec = recover(cfg, store.wal.clone(), store.manifest.clone())
+    assert sharded_fingerprint(rec) == sharded_fingerprint(store)
+    s = rec.shards[0].store
+    assert s.trees["late"].entry_bytes == 128
+    assert s.tree_dataset["late"] == "dsl"
+    found, vals = rec.read_batch("late", np.arange(50))
+    assert found.all() and (vals == np.arange(50) * 2).all()
+
+
+def test_empty_store_recovers():
+    reset_sst_ids()
+    cfg = small_config()
+    store = ShardedStore(cfg, shards=3)
+    rec = recover(cfg, store.wal.clone(), store.manifest.clone())
+    assert rec.n_shards == 3 and rec.log_pos == 0
+    assert rec.recovery_info["replayed_records"] == 0
+
+
+# --------------------------- service front door --------------------------------
+def test_deferred_writes_provably_absent_from_log():
+    """Admission control refuses a write BEFORE the WAL append, so a
+    Deferred request's keys appear in no WriteBatch record and recovery
+    cannot resurrect them -- while admitted keys of the same submit are
+    durable."""
+    reset_sst_ids()
+    cfg = small_config()
+    store = ShardedStore(cfg, router=ShardRouter.ranges(2, KEY_SPACE))
+    svc = StorageService(store, config=ServiceConfig(admission=True))
+    svc.create_tree("a")
+    hot = store.shard_tree(0, "a")
+    for _ in range(cfg.l0_max_groups):        # stall shard 0's tree
+        ks = np.arange(0, 900)
+        store.shards[0].store.write_batch("a", ks, ks + 1, tick=False)
+        store.shards[0].store.scheduler.flush_tree(
+            hot, trigger="mem", forced_kind="full")
+    assert svc.stalled_trees() == ["a@0"]
+    # spy on the WAL append boundary: every batch that reaches the log
+    # passes through here, before any tick-time truncation
+    appended: set = set()
+    orig_append = store.wal.append_batch
+
+    def spy(tree, keys, vals, **kw):
+        if vals is not None:
+            appended.update(zip(np.asarray(keys).tolist(),
+                                np.asarray(vals).tolist()))
+        return orig_append(tree, keys, vals, **kw)
+
+    store.wal.append_batch = spy
+    keys = np.array([10, 1500, 20, 1600])      # 2 hot (deferred), 2 cold
+    res = svc.submit([Put("a", keys, keys + 5)])
+    store.wal.append_batch = orig_append
+    assert isinstance(res[0], Deferred) and res[0].reason == "l0-stall"
+    deferred = set(res[0].request.keys.tolist())
+    assert deferred == {10, 20}
+    # the deferred (key, value) writes never reached the WAL append --
+    # admission refused them first -- while the admitted cold-shard keys
+    # did (the spy sees every append before any truncation can drop it)
+    assert not ({(10, 15), (20, 25)} & appended)
+    assert {(1500, 1505), (1600, 1605)} <= appended
+    # and nothing retained in the log carries them either
+    for rec in store.wal.records():
+        if isinstance(rec, WriteBatchRecord):
+            assert not ({(10, 15), (20, 25)}
+                        & set(zip(rec.keys.tolist(), rec.vals.tolist())))
+    # crash + StorageService.recover: the admitted cold-shard keys are
+    # durable with their new values; the deferred hot-shard keys read
+    # back their PRE-submit values (from the stall-setup flushes, carried
+    # by the checkpointed manifest) -- the deferred write left no trace
+    svc2 = StorageService.recover(cfg, store.wal.clone(),
+                                  store.manifest.clone())
+    found, vals = svc2.store.read_batch("a", keys)
+    assert found.all()
+    assert vals.tolist() == [11, 1505, 21, 1605]
+    assert svc2.store.recovery_info["from_checkpoint"]
+
+
+def test_service_workload_recovers_through_front_door():
+    """End-to-end through submit(): mixed typed requests, crash, recover
+    via the service front door, continue submitting."""
+    from repro.core.service import Delete, Get
+    reset_sst_ids()
+    cfg = small_config()
+    svc = StorageService(ShardedStore(cfg, shards=3),
+                         config=ServiceConfig(admission=False))
+    for t in TREES:
+        svc.create_tree(t)
+    rng = np.random.default_rng(2)
+    oracle = {t: {} for t in TREES}
+    for _ in range(12):
+        t = TREES[int(rng.integers(0, 2))]
+        ks = rng.integers(0, KEY_SPACE, 120)
+        vs = rng.integers(0, 2**31, 120)
+        dk = rng.integers(0, KEY_SPACE, 30)
+        svc.submit([Put(t, ks, vs), Delete(t, dk)])
+        oracle[t].update(zip(ks.tolist(), vs.tolist()))
+        for k in dk.tolist():
+            oracle[t][k] = None
+    live_fp = sharded_fingerprint(svc.store)
+    svc2 = StorageService.recover(cfg, svc.store.wal.clone(),
+                                  svc.store.manifest.clone())
+    assert sharded_fingerprint(svc2.store) == live_fp
+    # recovered service serves reads and accepts writes
+    for t, d in oracle.items():
+        ks = np.fromiter(d.keys(), np.int64, len(d))
+        res = svc2.submit([Get(t, ks)])[0]
+        for i, k in enumerate(ks.tolist()):
+            want = d[k]
+            assert bool(res.found[i]) == (want is not None)
+            if want is not None:
+                assert int(res.vals[i]) == want
+    svc2.submit([Put("a", np.array([42]), np.array([43]))])
+    found, vals = svc2.store.read_batch("a", np.array([42]))
+    assert found[0] and vals[0] == 43
+
+
+# --------------------------- manifest consistency ------------------------------
+def test_manifest_live_set_matches_tree_state():
+    """The edit-maintained live set must equal the SSTables actually
+    reachable from L0s and levels -- edits are the durable bookkeeping,
+    never rebuilt by scanning."""
+    cfg = small_config()
+    batches = gen_batches(seed=23, n_batches=15)
+    store, _, _, _ = run_workload(cfg, batches, shards=2)
+    reachable = {s.sst_id
+                 for sh in store.shards
+                 for t in sh.store.trees.values()
+                 for s in t.l0.all_tables()
+                 + [x for lvl in t.levels.levels for x in lvl]}
+    assert set(store.manifest.live) == reachable
+    # version advanced with every edit; watermark recorded
+    assert store.manifest.version >= len(store.manifest.edits)
