@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.engine import get_backend
 from repro.core.lsm.sstable import partition_run, reset_sst_ids
 from repro.core.lsm.storage import LSMStore, StoreConfig
 from repro.core.service import Get, Put, Scan, StorageService
@@ -139,16 +140,30 @@ class Workload:
 def measure(store, fn) -> dict:
     """Run fn() and report deltas: throughput proxy + I/O per op.
     Accepts a bare ``LSMStore`` or a ``StorageService``. ``write_stalls``
-    (backpressure deferrals) is surfaced as the ``stalls`` row field."""
+    (backpressure deferrals) is surfaced as the ``stalls`` row field.
+
+    Backend jit-shape-cache deltas (compiles vs cache hits over the
+    measured window -- recompile churn from new pow2 buckets, e.g. the
+    fused read path's tier stacks) land on the ``IOStats`` delta and the
+    row; when the store runs a device page pool, the window's fused-tier
+    hit rate rides along as ``device_pool_hit_rate``."""
     store = getattr(store, "store", store)     # unwrap a StorageService
+    backend = getattr(store, "backend", None) \
+        or get_backend(store.cfg.backend)
+    pool = getattr(store, "device_pool", None)
     store.sync_mem_stats()
     before = store.disk.stats.copy()
+    js0 = backend.jit_stats()
+    ps0 = pool.stats() if pool is not None else None
     fn()
     store.sync_mem_stats()
     d = store.disk.stats.delta(before)
+    js1 = backend.jit_stats()
+    d.jit_compiles = js1["jit_compiles"] - js0["jit_compiles"]
+    d.jit_cache_hits = js1["jit_cache_hits"] - js0["jit_cache_hits"]
     io, cpu = store.cfg.time_model.elapsed(d, scheme=store.cfg.scheme)
     ops = max(d.ops, 1)
-    return {
+    out = {
         "ops": d.ops,
         "throughput": ops / max(io, cpu, 1e-9),
         "io_pages_per_op": (d.pages_written + d.pages_read) / ops,
@@ -159,7 +174,16 @@ def measure(store, fn) -> dict:
         "stalls": d.write_stalls,
         "flushes_log": d.flushes_log,
         "flushes_mem": d.flushes_mem,
+        "jit_compiles": d.jit_compiles,
+        "jit_cache_hits": d.jit_cache_hits,
     }
+    if ps0 is not None:
+        ps1 = pool.stats()
+        dh = ps1["tier_hits"] - ps0["tier_hits"]
+        dm = ps1["tier_misses"] - ps0["tier_misses"]
+        out["device_pool_hit_rate"] = dh / max(1, dh + dm)
+        out["device_pool_resident_pages"] = ps1["resident_pages"]
+    return out
 
 
 def fmt_row(name: str, value: float, derived: str = "") -> str:

@@ -10,8 +10,15 @@ Two scenarios:
   the batched write path, so the maintenance scheduler has to arbitrate
   flushes/merges *across* trees sharing one write memory. Compares the
   §4.2 flush policies and a bounded per-tick merge budget.
+* **Read hot path** -- fixed-size Get batches over a growing last level,
+  staged (device pool off) vs fused (device-resident tier lookups):
+  staged pays one Bloom+search backend call per touched SSTable, so host
+  lookup latency grows ~linearly in SSTable count; fused collapses the
+  tier into one probe+search pass, growing sub-linearly.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -21,7 +28,7 @@ from repro.core.tuner.tuner import TunerConfig
 from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
 from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
 
-from .common import (MB, Workload, bulk_load, fmt_row, make_service,
+from .common import (BASE, MB, Workload, bulk_load, fmt_row, make_service,
                      make_sharded_service, measure)
 
 
@@ -133,6 +140,41 @@ def service_mixed(n_ops: int, *, n_trees=3, n_records=20_000):
                             for s in sessions)}
 
 
+def read_hot_path(n_batches: int, *, sst_count=16, batch=256, fused=True):
+    """Read-heavy hot path: fixed-size Get batches over a last level of
+    ``sst_count`` SSTables. ``fused=False`` runs the staged path (device
+    pool disabled, one Bloom probe + one ranged search per touched
+    SSTable); ``fused=True`` gives the pool enough budget to hold the
+    whole level, so after one cold acquire every batch resolves through
+    ``lookup_fused``. Host wall-time percentiles per lookup make the
+    scaling visible: staged grows ~linearly in ``sst_count`` at fixed
+    batch size, fused sub-linearly."""
+    per_sst = BASE["sstable_bytes"] // BASE["entry_bytes"]
+    n_records = sst_count * per_sst
+    svc = make_service(device_pool_bytes=(64 * MB if fused else 0))
+    svc.create_tree("kv")
+    bulk_load(svc.store, "kv", n_records)
+    rng = np.random.default_rng(5)
+    # warm-up: jit shape buckets + pool residency (the first acquire is a
+    # cold miss that admits the tier; fused serves from the second batch)
+    for _ in range(2):
+        svc.submit_strict([Get("kv", rng.integers(0, n_records, batch))])
+    lat = []
+
+    def drive():
+        for _ in range(n_batches):
+            ks = rng.integers(0, n_records, size=batch)
+            t0 = time.perf_counter()
+            svc.submit_strict([Get("kv", ks)])
+            lat.append((time.perf_counter() - t0) / batch * 1e6)
+
+    m = measure(svc, drive)
+    m["lookup_p50_us"] = float(np.percentile(lat, 50))
+    m["lookup_p99_us"] = float(np.percentile(lat, 99))
+    m["sst_count"] = len(svc.store.trees["kv"].levels.levels[-1])
+    return m
+
+
 def sharded_hot_shard(n_ops: int, *, shards=4, n_records=40_000,
                       write_mem_bytes=1 * MB, hot_frac=0.85,
                       write_frac=0.7, batch=256):
@@ -210,6 +252,20 @@ def run(full: bool = False, smoke: bool = False):
         "kv_serving/service_mixed", m["throughput"],
         f"submits={m['submits']};ops={m['ops']};stalls={m['stalls']};"
         f"deferred={m['deferred']}"))
+    n_hot = 30 if smoke else 200
+    for mode, fused in (("staged", False), ("fused", True)):
+        for ssts in ((4, 16) if smoke else (4, 16, 64)):
+            m = read_hot_path(n_hot, sst_count=ssts, fused=fused)
+            rows.append(fmt_row(
+                f"kv_serving/read_hot_path/{mode}/ssts{ssts}",
+                m["lookup_p50_us"],
+                f"scheme={mode};sst_count={m['sst_count']};"
+                f"lookup_p50_us={m['lookup_p50_us']:.3f};"
+                f"lookup_p99_us={m['lookup_p99_us']:.3f};"
+                f"device_pool_hit_rate={m.get('device_pool_hit_rate', 0):.3f};"
+                f"jit_compiles={m['jit_compiles']};"
+                f"jit_cache_hits={m['jit_cache_hits']};"
+                f"read_pages_per_op={m['read_pages_per_op']:.3f}"))
     n_shard = 6_000 if smoke else (60_000 if full else 24_000)
     for shards in ([4] if not full else [2, 4, 8]):
         m = sharded_hot_shard(n_shard, shards=shards,

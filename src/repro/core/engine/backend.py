@@ -1,12 +1,16 @@
 """Execution-backend interface for the LSM engine's hot loops.
 
-A backend supplies the engine's five data-parallel primitives:
+A backend supplies the engine's data-parallel primitives:
 
   * ``merge_runs(runs)``     -- k-way newest-wins merge (compaction)
   * ``ingest_run(keys, vals)`` -- sort+dedup of one write batch (ingest)
   * ``bloom_build(keys)``    -- per-SSTable Bloom filter construction
   * ``bloom_probe(f, keys)`` -- batched membership probes
   * ``lookup_batch(sorted_keys, queries)`` -- batched binary search in a run
+  * ``prepare_tier(tables, bloom_fn)`` / ``lookup_fused(view, queries)``
+    -- the device-resident read hot path: one fused Bloom-probe +
+    sorted-probe pipeline over a whole disjoint tier of SSTables, replacing
+    the per-SSTable ``bloom_probe`` + ``lookup_batch`` staging
 
 ``NumpyBackend`` carries the reference semantics; ``PallasBackend`` routes
 the same primitives through the Pallas TPU kernels (interpret mode on CPU,
@@ -23,6 +27,9 @@ benchmarks) without silently overriding code that chose one.
 from __future__ import annotations
 
 import os
+from dataclasses import dataclass
+
+import numpy as np
 
 from ...kernels.sizing import next_pow2, slots_for  # jax-free module
 
@@ -44,10 +51,98 @@ def bloom_sizing(n_keys: int, bits_per_key: int = BLOOM_BITS_PER_KEY):
     return n_pad, slots_for(n_pad, bits_per_key)
 
 
+@dataclass
+class TierView:
+    """One disjoint, min_key-sorted tier of SSTables prepared for fused
+    probing (built by ``ExecutionBackend.prepare_tier``).
+
+    The host-side metadata is backend-independent; ``payload`` carries the
+    backend's resident representation of the tier's key/val/Bloom pages
+    (numpy concatenations for the reference backend, device arrays for the
+    Pallas backend -- the part a ``DevicePagePool`` keeps HBM-resident).
+    """
+
+    backend: str
+    sst_ids: tuple                 # view identity (pool cache key)
+    starts: np.ndarray             # int64 [T] per-table min_key
+    ends: np.ndarray               # int64 [T] per-table max_key
+    offs: np.ndarray               # int64 [T] entry offset of each table
+    lens: np.ndarray               # int64 [T] entries per table
+    payload: object                # backend-owned resident arrays
+
+    @property
+    def num_tables(self) -> int:
+        return len(self.sst_ids)
+
+    @property
+    def num_entries(self) -> int:
+        return int(self.offs[-1] + self.lens[-1]) if len(self.lens) else 0
+
+
+@dataclass
+class FusedLookup:
+    """Per-query results of one fused tier probe, shaped so the caller can
+    replicate the staged path's page-pin accounting exactly:
+
+      ti/ok     -- table assignment (``assign_queries`` semantics);
+      positive  -- Bloom membership of each query against its table's
+                   filter (valid where ``ok``);
+      pos/hit   -- binary-search insertion position *relative to the
+                   table's run* and whether it is an exact match (valid
+                   where ``ok & positive``);
+      vals      -- the matched payload (valid where ``hit``).
+    """
+
+    ti: np.ndarray                 # int64 [K]
+    ok: np.ndarray                 # bool  [K]
+    positive: np.ndarray           # bool  [K]
+    pos: np.ndarray                # int64 [K]
+    hit: np.ndarray                # bool  [K]
+    vals: np.ndarray               # int64 [K]
+
+
+def assign_bounds(starts, ends, qkeys):
+    """Array-level twin of ``sstable.assign_queries``: map each query to
+    the covering table of a disjoint, min_key-sorted tier described by its
+    bound arrays. Shared by both backends' fused paths so assignment is
+    bit-identical to the staged probe."""
+    ti = np.searchsorted(starts, qkeys, side="right") - 1
+    ok = ti >= 0
+    ti = np.clip(ti, 0, len(starts) - 1)
+    ok &= qkeys <= ends[ti]
+    return ti.astype(np.int64), ok
+
+
 class ExecutionBackend:
-    """Interface of the engine's batched primitives."""
+    """Interface of the engine's batched primitives.
+
+    Backends also keep jit-shape-bucket cache counters
+    (``jit_compiles`` / ``jit_cache_hits``): every jitted entry point notes
+    the pow2 shape bucket it is about to run under, counting a compile the
+    first time a bucket is seen and a cache hit afterwards. The reference
+    backend jits nothing, so its counters stay zero; benchmarks surface
+    the deltas so recompile churn from new shape buckets (e.g. the fused
+    read path's tier stacks) is observable in ``BENCH_*.json`` rows.
+    """
 
     name: str = "abstract"
+
+    def __init__(self):
+        self._jit_shapes: set = set()
+        self.jit_compiles = 0
+        self.jit_cache_hits = 0
+
+    def _note_jit(self, *key) -> None:
+        """Record one jitted call under shape-bucket ``key``."""
+        if key in self._jit_shapes:
+            self.jit_cache_hits += 1
+        else:
+            self._jit_shapes.add(key)
+            self.jit_compiles += 1
+
+    def jit_stats(self) -> dict:
+        return {"jit_compiles": self.jit_compiles,
+                "jit_cache_hits": self.jit_cache_hits}
 
     def merge_runs(self, runs):
         """Merge sorted (keys, vals) runs, ordered newest-first, into one
@@ -84,6 +179,25 @@ class ExecutionBackend:
         Returns (pos, found): the insertion position of each query (int64)
         and whether ``sorted_keys[pos] == query`` (bool).
         """
+        raise NotImplementedError
+
+    def prepare_tier(self, tables, bloom_fn):
+        """Build a resident ``TierView`` over one disjoint, min_key-sorted
+        tier of SSTables. ``bloom_fn(sst)`` returns the backend's (cached)
+        Bloom filter of a table. Returns ``None`` when the tier cannot be
+        made resident (e.g. keys/values outside the kernel domain); the
+        caller then stays on the staged path."""
+        raise NotImplementedError
+
+    def lookup_fused(self, view: TierView, queries):
+        """Fused tier probe: Bloom probe + per-table sorted probe of every
+        query against the whole tier in one (or few) device invocations.
+
+        Must be bit-identical -- assignment, Bloom membership (including
+        false positives), insertion positions, matches, values -- to the
+        staged loop of per-table ``bloom_probe`` + ``lookup_batch`` calls.
+        Returns a ``FusedLookup``, or ``None`` when the queries fall
+        outside the backend's domain (caller falls back to staged)."""
         raise NotImplementedError
 
 

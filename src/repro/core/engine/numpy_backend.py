@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from .backend import (BLOOM_K_HASHES, ExecutionBackend, bloom_sizing,
+from .backend import (BLOOM_K_HASHES, ExecutionBackend, FusedLookup,
+                      TierView, assign_bounds, bloom_sizing,
                       register_backend)
 
 # Same int32 constants as kernels/bloom/ref.py (golden-ratio multipliers).
@@ -62,10 +63,35 @@ def _bloom_slots(keys, n_slots: int, k_hashes: int) -> np.ndarray:
             * h2.astype(np.int64)[:, None]) % n_slots
 
 
+def lower_bound_ranged(concat_keys, lo, hi, queries):
+    """Vectorized per-query lower-bound binary search of ``queries[i]``
+    within ``concat_keys[lo[i]:hi[i]]`` (each slice sorted). Returns the
+    *absolute* insertion positions -- exactly ``lo[i] +
+    searchsorted(concat_keys[lo[i]:hi[i]], queries[i])``.
+
+    The reference semantics of the fused sorted probe, shared with the
+    device route (``kernels.merge.ops.lookup_runs_device``)."""
+    lo = lo.astype(np.int64).copy()
+    hi = hi.astype(np.int64).copy()
+    n = len(concat_keys)
+    while True:
+        open_ = lo < hi
+        if not open_.any():
+            break
+        mid = (lo + hi) >> 1
+        less = np.zeros(len(queries), bool)
+        idx = np.minimum(mid[open_], max(n - 1, 0))
+        less[open_] = concat_keys[idx] < queries[open_]
+        lo = np.where(open_ & less, mid + 1, lo)
+        hi = np.where(open_ & ~less, mid, hi)
+    return lo
+
+
 class NumpyBackend(ExecutionBackend):
     name = "numpy"
 
     def __init__(self, *, k_hashes: int = BLOOM_K_HASHES):
+        super().__init__()
         self.k_hashes = k_hashes
 
     def merge_runs(self, runs):
@@ -106,6 +132,63 @@ class NumpyBackend(ExecutionBackend):
         safe = np.minimum(pos, len(sorted_keys) - 1)
         found[inb] = sorted_keys[safe[inb]] == np.asarray(queries)[inb]
         return pos.astype(np.int64), found
+
+    # -- fused tier probe ----------------------------------------------------
+    def prepare_tier(self, tables, bloom_fn):
+        """Host-resident tier view: concatenated key/val runs plus the
+        tier's flat Bloom bits. Never refuses (the reference path has no
+        domain limits)."""
+        filts = [np.asarray(bloom_fn(t)) for t in tables]
+        f_lens = np.array([len(f) for f in filts], np.int64)
+        f_offs = np.concatenate([[0], np.cumsum(f_lens)[:-1]])
+        lens = np.array([t.num_entries for t in tables], np.int64)
+        offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        payload = {
+            "keys": np.concatenate([t.keys for t in tables]),
+            "vals": np.concatenate([t.vals for t in tables]),
+            "fbits": np.concatenate(filts),
+            "f_offs": f_offs,
+            "nslots": f_lens,
+        }
+        return TierView(
+            backend=self.name,
+            sst_ids=tuple(t.sst_id for t in tables),
+            starts=np.array([t.min_key for t in tables], np.int64),
+            ends=np.array([t.max_key for t in tables], np.int64),
+            offs=offs, lens=lens, payload=payload)
+
+    def lookup_fused(self, view, queries):
+        """One vectorized pass over the whole tier: per-query table
+        assignment, Bloom probe against each query's own table filter
+        (bit-identical hash math to ``bloom_probe``, per-table slot
+        counts applied element-wise), ranged lower-bound search in the
+        concatenated runs, and payload gather."""
+        q = np.asarray(queries, np.int64)
+        p = view.payload
+        ti, ok = assign_bounds(view.starts, view.ends, q)
+        # Bloom: same double-hash int32 wraparound as _bloom_slots, with
+        # each query's modulus taken from its assigned table's filter.
+        n64 = p["nslots"][ti]
+        n32 = n64.astype(np.int32)
+        k32 = q.astype(np.int32)
+        h1 = (k32 * C1) % n32
+        h2 = ((k32 * C2) | np.int32(1)) % n32
+        j = np.arange(self.k_hashes, dtype=np.int64)
+        slots = (h1.astype(np.int64)[:, None]
+                 + j[None, :] * h2.astype(np.int64)[:, None]) % n64[:, None]
+        positive = p["fbits"][p["f_offs"][ti][:, None] + slots].all(axis=-1)
+        # Sorted probe, confined to each query's table slice.
+        lo = view.offs[ti]
+        lens = view.lens[ti]
+        abs_pos = lower_bound_ranged(p["keys"], lo, lo + lens, q)
+        pos = abs_pos - lo
+        inb = pos < lens
+        safe = np.minimum(abs_pos, len(p["keys"]) - 1)
+        hit = np.zeros(len(q), bool)
+        hit[inb] = p["keys"][safe[inb]] == q[inb]
+        vals = np.where(hit, p["vals"][safe], 0).astype(np.int64)
+        return FusedLookup(ti=ti, ok=ok, positive=positive,
+                           pos=pos.astype(np.int64), hit=hit, vals=vals)
 
 
 register_backend("numpy", NumpyBackend)

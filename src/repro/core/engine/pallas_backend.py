@@ -16,8 +16,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from .backend import (BLOOM_K_HASHES, ExecutionBackend, bloom_sizing,
-                      next_pow2, register_backend)
+from .backend import (BLOOM_K_HASHES, ExecutionBackend, FusedLookup,
+                      TierView, assign_bounds, bloom_sizing, next_pow2,
+                      register_backend)
 from .numpy_backend import NumpyBackend, ingest_order
 
 _INT32_MAX = 2**31 - 1
@@ -44,7 +45,9 @@ class PallasBackend(ExecutionBackend):
     name = "pallas"
 
     def __init__(self, *, interpret: bool | None = None,
-                 merge_tile: int = 512, k_hashes: int = BLOOM_K_HASHES):
+                 merge_tile: int = 512, k_hashes: int = BLOOM_K_HASHES,
+                 fused_wmax: int = 1024):
+        super().__init__()
         import jax
         import jax.numpy as jnp
 
@@ -58,6 +61,9 @@ class PallasBackend(ExecutionBackend):
         self.interpret = interpret
         self.merge_tile = merge_tile
         self.k_hashes = k_hashes
+        # Widest per-table filter (columns) the fused probe will take
+        # resident: bounds the kernel's one-hot working set to VMEM scale.
+        self.fused_wmax = fused_wmax
         self._fallback = NumpyBackend(k_hashes=k_hashes)
         self._searchsorted = jax.jit(lambda a, v: jnp.searchsorted(a, v))
         self.fallback_calls = 0     # out-of-int32-domain merges/probes
@@ -71,6 +77,8 @@ class PallasBackend(ExecutionBackend):
                 and _int32_safe_vals([v for _, v in runs])):
             self.fallback_calls += 1
             return self._fallback.merge_runs(runs)
+        self._note_jit("merge",
+                       tuple(next_pow2(len(k)) for k, _ in runs))
         keys, vals = self._merge_ops.merge_runs_device(
             runs, tile=self.merge_tile, interpret=self.interpret)
         return keys.astype(np.int64), vals.astype(np.int64)
@@ -95,6 +103,8 @@ class PallasBackend(ExecutionBackend):
             self.fallback_calls += 1
             return self._fallback.ingest_run(keys, vals)
         order = ingest_order(keys)
+        h = n // 2
+        self._note_jit("ingest", next_pow2(h), next_pow2(n - h))
         ks, src = self._merge_ops.ingest_run(
             keys[order].astype(np.int32), order.astype(np.int32),
             tile=self.merge_tile, interpret=self.interpret)
@@ -108,6 +118,7 @@ class PallasBackend(ExecutionBackend):
         if not _int32_safe_sorted(keys):
             self.fallback_calls += 1
             return ("numpy", self._fallback.bloom_build(keys))
+        self._note_jit("bloom_build", n_pad, n_slots)
         filt = self._bloom_ops.bloom_build_run(
             keys, n_keys_padded=n_pad, n_slots=n_slots,
             k_hashes=self.k_hashes, interpret=self.interpret)
@@ -133,6 +144,8 @@ class PallasBackend(ExecutionBackend):
             # impossible for keys that were inserted via the same wrap.
             self.fallback_calls += 1
             return self._fallback.bloom_probe(f.reshape(-1), keys)
+        self._note_jit("bloom_probe", f.shape,
+                       next_pow2(len(keys), lo=256))
         return self._bloom_ops.bloom_probe_run(
             f, keys, k_hashes=self.k_hashes, interpret=self.interpret)
 
@@ -151,6 +164,7 @@ class PallasBackend(ExecutionBackend):
         # (never matched -- keys are int32-safe), queries pad by repeating
         # their last element (results discarded).
         n, q = len(sorted_keys), len(queries)
+        self._note_jit("lookup", next_pow2(n), next_pow2(q))
         sk = np.pad(sorted_keys.astype(np.int32),
                     (0, next_pow2(n) - n), constant_values=_INT32_MAX)
         qk = np.pad(queries.astype(np.int32),
@@ -164,6 +178,84 @@ class PallasBackend(ExecutionBackend):
         safe = np.minimum(pos, n - 1)
         found[inb] = sorted_keys[safe[inb]] == queries[inb]
         return pos, found
+
+    # -- fused tier probe ----------------------------------------------------
+    def prepare_tier(self, tables, bloom_fn):
+        """Device-resident tier view: the tier's key/val runs live on
+        device as one INT_MAX-padded int32 concatenation, its Bloom
+        filters as one stacked [T*128, Wmax] array (the HBM pages a
+        ``DevicePagePool`` accounts for). Refuses (``None``) when any run
+        is outside the int32 kernel domain, when a table's filter came
+        from the numpy fallback, or when the widest filter would blow the
+        fused kernel's VMEM working set."""
+        keys_list = [t.keys for t in tables]
+        if not (all(_int32_safe_sorted(k) for k in keys_list)
+                and _int32_safe_vals([t.vals for t in tables])):
+            self.fallback_calls += 1
+            return None
+        filts = []
+        for t in tables:
+            kind, f = bloom_fn(t)
+            if kind != "pallas":
+                self.fallback_calls += 1
+                return None
+            filts.append(f)                      # bool [128, W_t]
+        wmax = max(f.shape[1] for f in filts)
+        if wmax > self.fused_wmax:
+            return None
+        fstack = np.zeros((len(tables) * 128, wmax), bool)
+        for i, f in enumerate(filts):
+            fstack[i * 128:(i + 1) * 128, :f.shape[1]] = f
+        lens = np.array([t.num_entries for t in tables], np.int64)
+        offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        total = int(lens.sum())
+        npad = next_pow2(max(1, total))
+        ck = np.full(npad, _INT32_MAX, np.int32)
+        cv = np.zeros(npad, np.int32)
+        ck[:total] = np.concatenate(keys_list)
+        cv[:total] = np.concatenate([t.vals for t in tables])
+        jnp = self._jnp
+        payload = {
+            "keys": jnp.asarray(ck),
+            "vals": jnp.asarray(cv),
+            "fstack": jnp.asarray(fstack),
+            "nslots_t": np.array([128 * f.shape[1] for f in filts],
+                                 np.int32),
+            "w_t": np.array([f.shape[1] for f in filts], np.int32),
+            "npad": npad,
+        }
+        return TierView(
+            backend=self.name,
+            sst_ids=tuple(t.sst_id for t in tables),
+            starts=np.array([t.min_key for t in tables], np.int64),
+            ends=np.array([t.max_key for t in tables], np.int64),
+            offs=offs, lens=lens, payload=payload)
+
+    def lookup_fused(self, view, queries):
+        """Two device invocations for the whole tier -- the fused Bloom
+        multi-probe and the fused ranged sorted probe -- in place of the
+        staged path's two invocations *per SSTable*."""
+        q = np.asarray(queries)
+        if not _int32_safe_keys([q]):
+            self.fallback_calls += 1
+            return None
+        p = view.payload
+        ti, ok = assign_bounds(view.starts, view.ends, q.astype(np.int64))
+        kpad = next_pow2(max(1, len(q)), lo=256)
+        self._note_jit("fused_bloom", view.num_tables,
+                       int(p["fstack"].shape[1]), kpad)
+        positive = self._bloom_ops.bloom_probe_multi(
+            p["fstack"], q.astype(np.int32), ti.astype(np.int32),
+            p["nslots_t"][ti], p["w_t"][ti],
+            k_hashes=self.k_hashes, interpret=self.interpret)
+        lo = view.offs[ti].astype(np.int32)
+        hi = (view.offs[ti] + view.lens[ti]).astype(np.int32)
+        self._note_jit("fused_lookup", p["npad"], kpad)
+        abs_pos, hit, vals = self._merge_ops.lookup_runs_device(
+            p["keys"], p["vals"], lo, hi, q.astype(np.int32))
+        return FusedLookup(ti=ti, ok=ok, positive=positive,
+                           pos=(abs_pos - view.offs[ti]).astype(np.int64),
+                           hit=hit, vals=vals.astype(np.int64))
 
 
 register_backend("pallas", PallasBackend)

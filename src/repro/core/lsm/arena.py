@@ -45,6 +45,11 @@ class MemoryArena:
                 - cfg.sim_cache_bytes) // cfg.page_bytes)
         self.cache = ClockCache(cache_pages, on_evict=self.ghost.add_evicted)
         self.disk = Disk(cfg.page_bytes, self.cache, self.ghost)
+        # Device page pool (HBM residency for fused reads): created by the
+        # first member store to register -- the pool needs the store's
+        # execution backend -- and shared by every shard after that.
+        # Residency is derived state, so it is never checkpointed.
+        self.device_pool = None
         # Durability plane: adopted (recovery) or fresh. The manifest's
         # identity guardrail rejects a config that contradicts the one the
         # durable state was written under.
@@ -57,7 +62,20 @@ class MemoryArena:
         """Add a member store; returns its index (== shard index for a
         sharded store, 0 for a standalone one)."""
         self.members.append(store)
+        if self.device_pool is None:
+            from .device_pool import DevicePagePool
+            self.device_pool = DevicePagePool(
+                store.backend, self.cfg.page_bytes,
+                getattr(self.cfg, "device_pool_bytes", 0))
+            self.disk.device_pool = self.device_pool
         return len(self.members) - 1
+
+    def set_device_pool_bytes(self, budget_bytes: int) -> None:
+        """Resize the device page pool (the governor's fused-read knob).
+        Unlike ``set_write_memory`` this is not WAL-logged: residency is
+        reconstructible and lookup results never depend on it."""
+        if self.device_pool is not None:
+            self.device_pool.set_budget_bytes(budget_bytes)
 
     @property
     def stats(self):

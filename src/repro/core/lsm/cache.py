@@ -33,6 +33,11 @@ class IOStats:
     ops: int = 0                    # logical operations observed
     write_stalls: int = 0           # write admission deferrals (service
                                     # backpressure: L0 stall / mem pressure)
+    jit_compiles: int = 0           # backend jit shape-bucket compiles
+    jit_cache_hits: int = 0         # backend jit shape-bucket cache hits
+                                    # (both 0 on store paths; benchmark
+                                    # windows populate them from
+                                    # ExecutionBackend.jit_stats deltas)
 
     def copy(self) -> "IOStats":
         return IOStats(**vars(self))
@@ -143,6 +148,8 @@ class Disk:
     page_bytes: int
     cache: ClockCache
     ghost: object = None                # tuner's GhostCache (optional)
+    device_pool: object = None          # DevicePagePool (optional): HBM
+                                        # residency for fused tier lookups
     stats: IOStats = field(default_factory=IOStats)
 
     def query_pin(self, sst_id: int, page_index: int) -> None:
@@ -210,3 +217,5 @@ class Disk:
         self.cache.invalidate_many(pids)
         if self.ghost is not None:
             self.ghost.invalidate_many(pids)
+        if self.device_pool is not None:
+            self.device_pool.drop_sst(sst)

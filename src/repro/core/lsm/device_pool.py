@@ -1,0 +1,144 @@
+"""DevicePagePool: the HBM-resident half of the buffer cache.
+
+The paper's buffer cache is an accounting model (``ClockCache`` pins over
+simulated disk pages). This pool makes residency *physical* for the read
+hot path: the same clock replacement, over the same (sst_id, page) ids --
+key/val pages ``0..num_pages-1`` plus the Bloom unit at ``-1`` -- decides
+which SSTables' pages stay device-resident, and a tier whose pages are all
+resident is probed through the backend's fused ``lookup_fused`` pipeline
+(one/two device invocations per tier) instead of the per-SSTable staged
+calls.
+
+Lifecycle per lookup tier:
+
+  * tier fully resident  -> pin (refresh) its pages, hand back the cached
+    ``TierView``; the tree runs the fused probe.
+  * any page absent      -> count a tier miss, *admit* the pages (clock
+    installs, possibly evicting another tier's pages), and return None;
+    this call is served by the staged path with its usual pin accounting,
+    the next one finds the tier resident.
+  * tier wider than pool -> miss, nothing admitted (it could never fit).
+
+Evicting any page of an SSTable drops the prepared views containing that
+table (a view is only valid while the whole tier is resident); SSTables
+retired by flush/merge are invalidated through ``Disk.drop_sst`` exactly
+like their buffer-cache pages. The pool's byte budget is set through
+``MemoryArena.set_device_pool_bytes`` -- the governor's ``MemoryPlan``
+actuator -- and a budget of 0 disables the pool entirely (every store
+behaves bit-identically to the staged-only engine).
+
+Residency is derived state: nothing here is checkpointed, recovery starts
+with a cold pool and identical lookup results.
+"""
+from __future__ import annotations
+
+from .cache import ClockCache
+
+_ABSENT = object()
+
+
+class DevicePagePool:
+    """Clock-managed HBM page pool backing fused tier lookups."""
+
+    def __init__(self, backend, page_bytes: int, budget_bytes: int = 0):
+        self.backend = backend
+        self.page_bytes = max(1, int(page_bytes))
+        self.cache = ClockCache(0, on_evict=self._on_evict)
+        self._views: dict = {}        # sst_ids tuple -> TierView | None
+        self._views_of: dict = {}     # sst_id -> set of view keys
+        self.tier_hits = 0            # tiers served fused
+        self.tier_misses = 0          # tiers that fell back to staged
+        self.set_budget_bytes(budget_bytes)
+
+    # -- budget (the governor's knob) ---------------------------------------
+    @property
+    def enabled(self) -> bool:
+        return self.cache.capacity > 0
+
+    @property
+    def budget_bytes(self) -> int:
+        return self._budget_bytes
+
+    def set_budget_bytes(self, budget_bytes: int) -> None:
+        self._budget_bytes = max(0, int(budget_bytes))
+        self.cache.resize(self._budget_bytes // self.page_bytes)
+        if not self.enabled:
+            self._views.clear()
+            self._views_of.clear()
+
+    # -- invalidation -------------------------------------------------------
+    def _on_evict(self, pid) -> None:
+        self._drop_views(pid[0])
+
+    def _drop_views(self, sst_id) -> None:
+        for key in self._views_of.pop(sst_id, ()):
+            self._views.pop(key, None)
+            for s in key:
+                if s != sst_id and s in self._views_of:
+                    self._views_of[s].discard(key)
+
+    def drop_sst(self, sst) -> None:
+        """Retire an SSTable (flush/merge replaced it): its pages leave the
+        pool and every view over it dies."""
+        self.cache.invalidate_many(
+            (sst.sst_id, p) for p in range(-1, sst.num_pages))
+        self._drop_views(sst.sst_id)
+
+    # -- the read hot path --------------------------------------------------
+    def acquire(self, tables, bloom_fn):
+        """Return a resident ``TierView`` over ``tables`` (a disjoint,
+        min_key-sorted lookup tier) or None when the caller must stay on
+        the staged path this call."""
+        if not self.enabled or not tables:
+            return None
+        key = tuple(t.sst_id for t in tables)
+        view = self._views.get(key, _ABSENT)
+        if view is not _ABSENT:
+            # A live view PROVES residency: it was built with every member
+            # page in the pool, and every removal path (clock eviction,
+            # budget shrink, drop_sst) drops the views over the departed
+            # SSTable first. So the hot path is one dict probe -- no
+            # per-page walk. Reference bits are not refreshed here; a hot
+            # tier the clock nonetheless evicts re-admits on its next miss.
+            if view is None:
+                # Cached refusal: the backend cannot prepare this tier
+                # (e.g. outside the kernel domain); stays staged without
+                # re-attempting preparation per batch.
+                self.tier_misses += 1
+                return None
+            self.tier_hits += 1
+            return view
+        pids = [(t.sst_id, p) for t in tables
+                for p in range(-1, t.num_pages)]
+        if len(pids) > self.cache.capacity:
+            self.tier_misses += 1
+            return None
+        if not all(pid in self.cache for pid in pids):
+            # Cold: admit (clock decides what yields) and serve staged.
+            self.tier_misses += 1
+            for pid in pids:
+                self.cache.pin(pid)
+            return None
+        for pid in pids:          # resident: refresh every reference bit
+            self.cache.pin(pid)
+        view = self.backend.prepare_tier(tables, bloom_fn)
+        self._views[key] = view
+        for s in key:
+            self._views_of.setdefault(s, set()).add(key)
+        if view is None:
+            self.tier_misses += 1
+            return None
+        self.tier_hits += 1
+        return view
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "tier_hits": self.tier_hits,
+            "tier_misses": self.tier_misses,
+            "page_hits": self.cache.hits,
+            "page_misses": self.cache.misses,
+            "resident_pages": len(self.cache),
+            "capacity_pages": self.cache.capacity,
+            "budget_bytes": self._budget_bytes,
+        }

@@ -103,6 +103,10 @@ class StoreConfig:
     # Execution backend for merges/Bloom/batched lookups ("numpy" |
     # "pallas"); None defers to the REPRO_LSM_BACKEND env var, then "numpy".
     backend: str | None = None
+    # Device (HBM) page-pool budget for the fused read hot path; 0 keeps
+    # the pool disabled and every lookup on the staged per-SSTable path.
+    # Governors resize it at runtime via MemoryPlan.device_pool_bytes.
+    device_pool_bytes: int = 0
     # Max discretionary maintenance units per scheduler tick (None = drain
     # all merge debt every tick). Mandatory memory/log enforcement is never
     # budgeted.
@@ -127,6 +131,10 @@ class StoreConfig:
         if self.entry_bytes <= 0:
             raise ValueError(f"entry_bytes must be positive, got "
                              f"{self.entry_bytes}")
+        if self.device_pool_bytes < 0:
+            raise ValueError(
+                f"device_pool_bytes must be >= 0 (0 disables the device "
+                f"page pool), got {self.device_pool_bytes}")
         if self.merge_budget is not None and self.merge_budget < 0:
             raise ValueError(
                 f"merge_budget must be >= 0 (or None to drain all debt "
@@ -246,6 +254,15 @@ class LSMStore:
     def set_write_memory(self, x: int) -> None:
         """Apply a new write-memory size (tuner's actuator)."""
         self.arena.set_write_memory(x)
+
+    @property
+    def device_pool(self):
+        """The (possibly shared) HBM page pool behind fused reads."""
+        return self.arena.device_pool
+
+    def set_device_pool_bytes(self, budget_bytes: int) -> None:
+        """Resize the device page pool (governor's fused-read actuator)."""
+        self.arena.set_device_pool_bytes(budget_bytes)
 
     # -- durability plane -------------------------------------------------------
     @property

@@ -66,6 +66,10 @@ class LSMTree:
                                  dynamic=dynamic_levels,
                                  static_num_levels=static_num_levels)
         self.stats = TreeStats()
+        # Memoized per-SSTable Bloom filters, keyed by sst_id: built once
+        # per table lifetime (not per probed batch) and invalidated when
+        # flush/merge retires the table through _manifest_remove.
+        self._bloom_cache: dict = {}
         # §4.1.4 adaptive flush window: (log_pos, bytes) of recent partial flushes
         self.partial_flush_window: list = []
 
@@ -96,6 +100,10 @@ class LSMTree:
             self.manifest.add_sstable(self.shard_id, self.name, sst, kind)
 
     def _manifest_remove(self, sst) -> None:
+        # The manifest edit marks the table's retirement: its memoized
+        # Bloom filter dies with it (the device pool learns through
+        # Disk.drop_sst at the same call sites).
+        self._bloom_cache.pop(sst.sst_id, None)
         if self.manifest is not None:
             self.manifest.remove_sstable(self.shard_id, self.name, sst)
 
@@ -311,12 +319,14 @@ class LSMTree:
 
     # -- reads ---------------------------------------------------------------
     def _bloom(self, sst):
-        """Backend-built Bloom filter of one SSTable, cached on the table
-        (rebuilt if a differently-named backend owns the cached one)."""
-        if sst.bloom is None or sst.bloom[0] != self.backend.name:
-            sst.bloom = (self.backend.name,
-                         self.backend.bloom_build(sst.keys))
-        return sst.bloom[1]
+        """Backend-built Bloom filter of one SSTable, memoized per sst_id
+        for the table's lifetime (rebuilt if a differently-named backend
+        owns the cached one; invalidated at the manifest edit sites)."""
+        ent = self._bloom_cache.get(sst.sst_id)
+        if ent is None or ent[0] != self.backend.name:
+            ent = (self.backend.name, self.backend.bloom_build(sst.keys))
+            self._bloom_cache[sst.sst_id] = ent
+        return ent[1]
 
     def _bloom_gate(self, sst, qk):
         """pre_probe hook: pin Bloom pages (one pin per probed key, as in
@@ -330,6 +340,53 @@ class LSMTree:
         pages = np.where(hit, pos,
                          np.minimum(pos, sst.num_entries - 1)) // epp
         self.disk.query_pin_many(sst.sst_id, pages)
+
+    def _probe_tier_fused(self, tier, keys, found, vals, unresolved) -> bool:
+        """Fused twin of ``probe_tier``: one (or two) device invocations
+        for the whole tier through the pooled ``TierView``, then a host
+        replay of the staged path's exact per-table pin sequence -- so
+        results, page pins and IOStats are bit-identical to the staged
+        loop. Returns False when this tier must take the staged path for
+        this call (pool disabled/cold, backend refused the tier/queries).
+        """
+        pool = self.disk.device_pool
+        if pool is None or not pool.enabled:
+            return False
+        idx_un = np.flatnonzero(unresolved)
+        if not len(idx_un) or not tier:
+            return True                    # the staged loop would no-op too
+        view = pool.acquire(tier, self._bloom)
+        if view is None:
+            return False
+        r = self.backend.lookup_fused(view, keys[idx_un])
+        if r is None:
+            return False
+        okidx = np.flatnonzero(r.ok)
+        if not len(okidx):
+            return True
+        # Group by table with ONE stable sort: ascending table order, and
+        # ascending query order within a table -- exactly the staged loop's
+        # (np.unique, flatnonzero) visit order without T full-batch scans.
+        order = okidx[np.argsort(r.ti[okidx], kind="stable")]
+        tis = r.ti[order]
+        starts = np.flatnonzero(np.r_[True, tis[1:] != tis[:-1]])
+        bounds = np.append(starts, len(tis))
+        for bi in range(len(starts)):
+            sel = order[bounds[bi]:bounds[bi + 1]]
+            sst = tier[tis[bounds[bi]]]
+            # _bloom_gate's pins: one Bloom-unit pin per probed key.
+            self.disk.query_pin_many(sst.sst_id, [-1] * len(sel))
+            positive = r.positive[sel]
+            if not positive.any():
+                continue
+            sel = sel[positive]
+            pos, hit = r.pos[sel], r.hit[sel]
+            self._leaf_pins(sst, pos, hit)
+            gidx = idx_un[sel[hit]]
+            found[gidx] = True
+            vals[gidx] = r.vals[sel[hit]]
+            unresolved[gidx] = False
+        return True
 
     def lookup_batch(self, keys):
         """Batched point lookups; returns (found bool[n], vals int64[n]).
@@ -345,6 +402,11 @@ class LSMTree:
         for tier in self.l0.lookup_tiers() + self.levels.lookup_tiers():
             if not unresolved.any():
                 break
+            # Device-resident hot path first: one fused probe per tier.
+            # Any miss (cold pool, refused tier) stays on the staged loop
+            # for this call with identical results and pin accounting.
+            if self._probe_tier_fused(tier, keys, found, vals, unresolved):
+                continue
             probe_tier(tier, keys, found, vals, unresolved,
                        self.backend.lookup_batch,
                        pre_probe=self._bloom_gate,

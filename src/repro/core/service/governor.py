@@ -31,6 +31,9 @@ class MemoryPlan:
 
     write_memory_bytes: int | None = None
     flush_policy: str | None = None
+    # Byte budget of the device (HBM) page pool behind fused tier lookups;
+    # actuated via MemoryArena.set_device_pool_bytes (0 disables the pool).
+    device_pool_bytes: int | None = None
     note: str = ""
 
 

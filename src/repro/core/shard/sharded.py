@@ -121,6 +121,14 @@ class ShardedStore:
     def set_write_memory(self, x: int) -> None:
         self.arena.set_write_memory(x)
 
+    @property
+    def device_pool(self):
+        """The shared HBM page pool behind fused reads (one per arena)."""
+        return self.arena.device_pool
+
+    def set_device_pool_bytes(self, budget_bytes: int) -> None:
+        self.arena.set_device_pool_bytes(budget_bytes)
+
     def write_memory_used(self) -> int:
         return sum(sh.store.write_memory_used() for sh in self.shards)
 

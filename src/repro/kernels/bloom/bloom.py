@@ -78,6 +78,70 @@ def build_filter(keys, *, n_slots: int, k_hashes: int = 7, tile: int = 256,
     )(keys.reshape(1, -1))
 
 
+def _probe_multi_kernel(keys_ref, ti_ref, ns_ref, w_ref, filt_ref, out_ref,
+                        *, wmax, k_hashes):
+    """One grid step probes one query tile against one table's filter
+    block; contributions land only where the query is assigned to that
+    table (accumulator over the table axis -- no data-dependent filter
+    selection needed)."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...].reshape(-1)
+    ti = ti_ref[...].reshape(-1)
+    ns = ns_ref[...].reshape(-1)
+    w = w_ref[...].reshape(-1)
+    k = keys.shape[0]
+    # Same double hash as _hash_onehots, modulus per query.
+    h1 = (keys * C1) % ns
+    h2 = ((keys * C2) | 1) % ns
+    j = jax.lax.broadcasted_iota(jnp.int32, (k, k_hashes), 1)
+    slots = (h1[:, None] + j * h2[:, None]) % ns[:, None]        # [K, k]
+    row = (slots // w[:, None]).reshape(-1)
+    col = (slots % w[:, None]).reshape(-1)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (row.shape[0], 128), 1)
+    c_iota = jax.lax.broadcasted_iota(jnp.int32, (row.shape[0], wmax), 1)
+    oh_r = (row[:, None] == r_iota).astype(jnp.float32)
+    oh_c = (col[:, None] == c_iota).astype(jnp.float32)
+    rows = jax.lax.dot(oh_r, filt_ref[...].astype(jnp.float32),
+                       precision=jax.lax.Precision.HIGHEST)      # [K*k, Wmax]
+    vals = jnp.sum(rows * oh_c, axis=-1).reshape(k, k_hashes)
+    member = jnp.all(vals > 0, axis=-1)
+    out_ref[...] += jnp.where(ti == t, member,
+                              False).astype(jnp.int32)[None, :]
+
+
+@partial(jax.jit, static_argnames=("k_hashes", "tile", "interpret"))
+def probe_filters_multi(fstack, keys, ti, nslots, w, *, k_hashes: int = 7,
+                        tile: int = 256, interpret: bool = True):
+    """fstack [T*128, Wmax] (T filters, columns zero-padded to Wmax);
+    keys/ti/nslots/w [K] (K % tile == 0; ti = -1 marks padding) ->
+    int32 mask [K]. Grid sweeps (query tile, table); the filter stays
+    one [128, Wmax] block per step, so VMEM holds one table's filter at
+    a time regardless of tier width."""
+    k = keys.shape[0]
+    assert k % tile == 0 and fstack.shape[0] % 128 == 0
+    t_count = fstack.shape[0] // 128
+    wmax = fstack.shape[1]
+    out = pl.pallas_call(
+        partial(_probe_multi_kernel, wmax=wmax, k_hashes=k_hashes),
+        grid=(k // tile, t_count),
+        in_specs=[pl.BlockSpec((1, tile), lambda i, t: (0, i)),
+                  pl.BlockSpec((1, tile), lambda i, t: (0, i)),
+                  pl.BlockSpec((1, tile), lambda i, t: (0, i)),
+                  pl.BlockSpec((1, tile), lambda i, t: (0, i)),
+                  pl.BlockSpec((128, wmax), lambda i, t: (t, 0))],
+        out_specs=pl.BlockSpec((1, tile), lambda i, t: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.int32),
+        interpret=interpret,
+    )(keys.reshape(1, -1), ti.reshape(1, -1), nslots.reshape(1, -1),
+      w.reshape(1, -1), fstack)
+    return out.reshape(-1)
+
+
 @partial(jax.jit, static_argnames=("k_hashes", "tile", "interpret"))
 def probe_filter(filt, keys, *, k_hashes: int = 7, tile: int = 256,
                  interpret: bool = True):

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..sizing import next_pow2, slots_for  # noqa: F401  (re-exported)
-from .bloom import build_filter, probe_filter
-from .ref import build_ref, probe_ref
+from .bloom import build_filter, probe_filter, probe_filters_multi
+from .ref import build_ref, probe_multi_ref, probe_ref
 
 
 def bloom_build(keys, *, bits_per_key: int = 10, k_hashes: int = 7,
@@ -74,6 +74,35 @@ def bloom_probe_run(filt, keys, *, k_hashes: int = 7,
                            interpret=interpret)
     else:
         out = probe_ref(filt, keys, k_hashes)
+    return np.asarray(out[:n]).astype(bool)
+
+
+def bloom_probe_multi(fstack, keys, ti, nslots, w, *, k_hashes: int = 7,
+                      use_kernel: bool = True, interpret: bool = True):
+    """Run-sized fused probe: each key against its assigned table's filter
+    inside a stacked [T*128, Wmax] tier filter, one device invocation for
+    the whole tier. Queries are bucketed to a power of two (>= 256) and
+    padded with ti=-1 (never a member), so fused probes across tiers of
+    the same (T, Wmax, K-bucket) share compiled kernels.
+    """
+    fstack = jnp.asarray(fstack).astype(jnp.int32)
+    keys = jnp.asarray(keys, jnp.int32)
+    ti = jnp.asarray(ti, jnp.int32)
+    nslots = jnp.asarray(nslots, jnp.int32)
+    w = jnp.asarray(w, jnp.int32)
+    n = keys.shape[0]
+    m = next_pow2(max(1, n), lo=256)
+    if m > n:
+        keys = jnp.concatenate([keys, jnp.zeros((m - n,), jnp.int32)])
+        ti = jnp.concatenate([ti, jnp.full((m - n,), -1, jnp.int32)])
+        nslots = jnp.concatenate([nslots,
+                                  jnp.full((m - n,), 128, jnp.int32)])
+        w = jnp.concatenate([w, jnp.ones((m - n,), jnp.int32)])
+    if use_kernel:
+        out = probe_filters_multi(fstack, keys, ti, nslots, w,
+                                  k_hashes=k_hashes, interpret=interpret)
+    else:
+        out = probe_multi_ref(fstack, keys, ti, nslots, w, k_hashes)
     return np.asarray(out[:n]).astype(bool)
 
 

@@ -36,3 +36,26 @@ def probe_ref(filt, keys, k_hashes: int = 7):
     slots = _hashes(keys.astype(jnp.int32), n_slots, k_hashes)   # [K, k]
     vals = filt.reshape(-1)[slots]
     return jnp.all(vals > 0, axis=-1).astype(jnp.int32)
+
+
+def probe_multi_ref(fstack, keys, ti, nslots, w, k_hashes: int = 7):
+    """Fused multi-filter oracle: probe each key against *its own* table's
+    filter in a stack of T filters.
+
+    fstack: [T*128, Wmax] -- table t's [128, W_t] filter at rows
+    [t*128, (t+1)*128), columns zero-padded to Wmax. Per-query arrays:
+    ``ti`` (table index; -1 = padding, always a miss), ``nslots``/``w``
+    (that table's slot count and column width). Same double-hash int32
+    math as ``probe_ref``, with the modulus taken per-query.
+    """
+    keys = keys.astype(jnp.int32)
+    h1 = (keys * C1) % nslots
+    h2 = ((keys * C2) | 1) % nslots
+    j = jnp.arange(k_hashes, dtype=jnp.int32)
+    slots = (h1[:, None] + j[None, :] * h2[:, None]) % nslots[:, None]
+    row = ti[:, None] * 128 + slots // w[:, None]
+    col = slots % w[:, None]
+    safe = jnp.clip(row, 0, fstack.shape[0] - 1)
+    vals = fstack[safe, col]
+    return (jnp.all(vals > 0, axis=-1)
+            & (ti >= 0)).astype(jnp.int32)

@@ -138,6 +138,50 @@ def ingest_run(keys, src, *, tile: int = 512, use_kernel: bool = True,
                             use_kernel=use_kernel, interpret=interpret)
 
 
+@jax.jit
+def _ranged_lookup(keys, vals, lo, hi, q):
+    """Per-query lower-bound binary search of q[i] in keys[lo[i]:hi[i]]
+    (each slice sorted), plus the hit test and payload gather -- one
+    fused device invocation for a whole tier of concatenated runs.
+    Same vectorized open-interval scheme as ``_diag_splits``."""
+    n = keys.shape[0]
+
+    def body(_, lohi):
+        lo, hi = lohi
+        open_ = lo < hi
+        mid = (lo + hi) // 2
+        less = keys[jnp.clip(mid, 0, max(n - 1, 0))] < q
+        return (jnp.where(open_ & less, mid + 1, lo),
+                jnp.where(open_ & ~less, mid, hi))
+
+    pos, _ = jax.lax.fori_loop(0, 32, body, (lo, hi))
+    safe = jnp.clip(pos, 0, max(n - 1, 0))
+    hit = (pos < hi) & (keys[safe] == q)   # hi: the original range end
+    return pos, hit, jnp.where(hit, vals[safe], 0)
+
+
+def lookup_runs_device(keys, vals, lo, hi, queries):
+    """Run-sized fused sorted probe: ``queries[i]`` against the sorted
+    slice ``keys[lo[i]:hi[i]]`` of a tier's concatenated runs (device
+    arrays, INT_MAX-padded). Queries are bucketed to a power of two
+    (>= 256) with empty ranges so tiers sharing the (N, K-bucket) shape
+    share the compiled search. Returns numpy (abs_pos, hit, val)."""
+    q = jnp.asarray(queries, jnp.int32)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    n = q.shape[0]
+    m = next_pow2(max(1, n), lo=256)
+    if m > n:
+        z = jnp.zeros((m - n,), jnp.int32)
+        q = jnp.concatenate([q, z])
+        lo = jnp.concatenate([lo, z])
+        hi = jnp.concatenate([hi, z])
+    pos, hit, val = _ranged_lookup(keys, vals, lo, hi, q)
+    return (np.asarray(pos[:n]).astype(np.int64),
+            np.asarray(hit[:n]).astype(bool),
+            np.asarray(val[:n]).astype(np.int64))
+
+
 def merge_runs_device(runs, *, tile: int = 512, use_kernel: bool = True,
                       interpret: bool = True):
     """Run-sized engine entry point: fold k sorted runs (ordered newest

@@ -1,0 +1,284 @@
+"""Fused device-resident read path vs the staged per-SSTable loop.
+
+The contract under test: with a ``DevicePagePool`` enabled, every lookup
+batch must be bit-identical to the staged engine -- results, buffer-cache
+page pins, ``IOStats`` -- across schemes, shard counts and backends; the
+pool itself only changes *where* the probe computation runs. Plus the
+direct backend seam (``prepare_tier`` / ``lookup_fused`` against the
+staged primitives), eviction/shrink fallback mid-workload, Bloom
+memoization across the manifest edit sites, the jit shape-cache counters,
+and the ``MemoryPlan.device_pool_bytes`` actuation path.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import NumpyBackend, PallasBackend
+from repro.core.engine.backend import assign_bounds
+from repro.core.lsm.sstable import partition_run, reset_sst_ids
+from repro.core.lsm.storage import LSMStore, StoreConfig
+from repro.core.service import (MemoryGovernor, MemoryPlan, Get, Put,
+                                StorageService)
+from repro.core.shard import ShardedStore
+from repro.runtime.hbm_tuner import DevicePoolGovernor
+
+KB, MB = 1 << 10, 1 << 20
+
+
+@pytest.fixture(scope="module")
+def backends():
+    return NumpyBackend(), PallasBackend(interpret=True)
+
+
+def small_config(**kw):
+    base = dict(total_memory_bytes=32 * MB, write_memory_bytes=256 * KB,
+                sim_cache_bytes=1 * MB, page_bytes=4 * KB, entry_bytes=256,
+                active_sstable_bytes=64 * KB, sstable_bytes=128 * KB,
+                max_log_bytes=8 * MB, scheme="partitioned",
+                flush_policy="opt")
+    base.update(kw)
+    reset_sst_ids()
+    return StoreConfig(**base)
+
+
+def make_tier(rng, n_tables, per_table=700):
+    """A disjoint, min_key-sorted lookup tier (what a disk level holds)."""
+    keys = np.sort(rng.choice(200_000, size=n_tables * per_table,
+                              replace=False)).astype(np.int64)
+    vals = rng.integers(1, 2**30, size=len(keys)).astype(np.int64)
+    return partition_run(keys, vals, 0, 0, 256, 4 * KB,
+                         per_table * 256)
+
+
+# --------------------------- backend seam -----------------------------------
+@pytest.mark.parametrize("n_tables", [1, 3, 7])
+def test_lookup_fused_matches_staged_primitives(backends, n_tables):
+    """prepare_tier + lookup_fused == per-table bloom_probe + lookup_batch
+    on every field, for both backends, including misses and off-tier keys."""
+    rng = np.random.default_rng(n_tables)
+    reset_sst_ids()
+    tier = make_tier(rng, n_tables)
+    hits = rng.choice(np.concatenate([t.keys for t in tier]), 300)
+    queries = np.concatenate(
+        [hits, rng.integers(0, 220_000, 200)]).astype(np.int64)
+    starts = np.array([t.min_key for t in tier], np.int64)
+    ends = np.array([t.max_key for t in tier], np.int64)
+    ti, ok = assign_bounds(starts, ends, queries)
+    for b in backends:
+        view = b.prepare_tier(tier, lambda s: b.bloom_build(s.keys))
+        assert view is not None, b.name
+        r = b.lookup_fused(view, queries)
+        assert r is not None, b.name
+        np.testing.assert_array_equal(r.ti, ti)
+        np.testing.assert_array_equal(r.ok, ok)
+        for t_i in range(n_tables):
+            sel = np.flatnonzero(ok & (ti == t_i))
+            sst = tier[t_i]
+            pos_ref = b.bloom_probe(b.bloom_build(sst.keys), queries[sel])
+            np.testing.assert_array_equal(r.positive[sel], pos_ref,
+                                          err_msg=f"{b.name} bloom t={t_i}")
+            p, h = b.lookup_batch(sst.keys, queries[sel])
+            np.testing.assert_array_equal(r.pos[sel], p)
+            np.testing.assert_array_equal(r.hit[sel], h)
+            np.testing.assert_array_equal(r.vals[sel][h], sst.vals[p[h]])
+
+
+def test_fused_refuses_out_of_domain(backends):
+    """Out-of-int32 tiers/queries return None (staged fallback), never
+    wrong results."""
+    nb, pb = backends
+    rng = np.random.default_rng(9)
+    reset_sst_ids()
+    big = np.sort(rng.choice(2**40, 500, replace=False)).astype(np.int64)
+    tier = partition_run(big, big, 0, 0, 256, 4 * KB, 128 * KB)
+    assert pb.prepare_tier(tier, lambda s: pb.bloom_build(s.keys)) is None
+    tier2 = make_tier(rng, 2)
+    view = pb.prepare_tier(tier2, lambda s: pb.bloom_build(s.keys))
+    assert view is not None
+    assert pb.lookup_fused(view, np.array([1, 2**40], np.int64)) is None
+    # the numpy reference accepts the full int64 domain
+    viewn = nb.prepare_tier(tier, lambda s: nb.bloom_build(s.keys))
+    rn = nb.lookup_fused(viewn, big[:64])
+    assert rn is not None and rn.hit.all()
+
+
+# --------------------------- store differential -----------------------------
+def drive_store(store, batches=90, read_tail=10, key_max=30_000, seed=0):
+    """Mixed churn (flushes + merges retire SSTables under the pool) then a
+    read-only tail (tiers stabilize, the pool warms, fused serves)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(batches):
+        ks = rng.integers(0, key_max, 256)
+        if i % 3 != 2:
+            store.write_batch("t", ks, ks * 3)
+        f, v = store.read_batch("t", rng.integers(0, key_max, 256))
+        out.append((f, v))
+    for _ in range(read_tail):
+        f, v = store.read_batch("t", rng.integers(0, key_max, 256))
+        out.append((f, v))
+    return out
+
+
+def assert_identical(s0, out0, s1, out1):
+    for (f0, v0), (f1, v1) in zip(out0, out1):
+        np.testing.assert_array_equal(f0, f1)
+        np.testing.assert_array_equal(v0, v1)
+    assert vars(s0.disk.stats) == vars(s1.disk.stats)
+    assert (s0.disk.cache.hits, s0.disk.cache.misses) \
+        == (s1.disk.cache.hits, s1.disk.cache.misses)
+
+
+@pytest.mark.parametrize("backend,scheme", [
+    ("numpy", "partitioned"),
+    ("numpy", "accordion-data"),
+    ("pallas", "partitioned"),
+])
+def test_store_fused_vs_staged_bit_identical(backend, scheme):
+    batches = 90 if backend == "numpy" else 36
+    runs = []
+    for pool in (0, 32 * MB):
+        s = LSMStore(small_config(backend=backend, scheme=scheme,
+                                  device_pool_bytes=pool))
+        s.create_tree("t")
+        runs.append((s, drive_store(s, batches=batches)))
+    (s0, o0), (s1, o1) = runs
+    assert_identical(s0, o0, s1, o1)
+    st = s1.device_pool.stats()
+    assert st["tier_hits"] > 0, "fused path never fired"
+    assert st["resident_pages"] <= st["capacity_pages"]
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_sharded_fused_vs_staged_bit_identical(shards):
+    runs = []
+    for pool in (0, 32 * MB):
+        s = ShardedStore(small_config(device_pool_bytes=pool),
+                         shards=shards)
+        s.create_tree("t")
+        runs.append((s, drive_store(s, batches=90)))
+    (s0, o0), (s1, o1) = runs
+    assert_identical(s0, o0, s1, o1)
+    assert s1.device_pool.stats()["tier_hits"] > 0
+
+
+def test_shrink_mid_workload_falls_back_staged():
+    """Shrinking the budget mid-run (evictions drop the prepared views)
+    must leave results and accounting identical to a staged-only twin:
+    affected tiers re-admit or stay staged, never serve stale views."""
+    s0 = LSMStore(small_config(device_pool_bytes=0))
+    s0.create_tree("t")
+    s1 = LSMStore(small_config(device_pool_bytes=32 * MB))
+    s1.create_tree("t")
+    rng0, rng1 = (np.random.default_rng(4) for _ in range(2))
+    outs = [[], []]
+    for i in range(80):
+        for s, rng, out in ((s0, rng0, outs[0]), (s1, rng1, outs[1])):
+            ks = rng.integers(0, 30_000, 256)
+            if i % 3 != 2:
+                s.write_batch("t", ks, ks * 3)
+            out.append(s.read_batch("t", rng.integers(0, 30_000, 256)))
+        if i == 40:
+            assert s1.device_pool.stats()["resident_pages"] > 16
+            s1.set_device_pool_bytes(16 * 4 * KB)   # violent shrink
+            assert s1.device_pool.stats()["resident_pages"] <= 16
+        if i == 60:
+            s1.set_device_pool_bytes(0)             # disable entirely
+            assert not s1.device_pool.enabled
+    assert_identical(s0, outs[0], s1, outs[1])
+
+
+def test_drop_sst_invalidates_pages_and_views():
+    s = LSMStore(small_config(device_pool_bytes=32 * MB))
+    s.create_tree("t")
+    drive_store(s, batches=60, read_tail=8)
+    pool = s.device_pool
+    assert pool.stats()["tier_hits"] > 0
+    # every cached view must be over live SSTables only
+    live = {sst.sst_id for t in s.trees.values()
+            for tier in t.l0.lookup_tiers() + t.levels.lookup_tiers()
+            for sst in tier}
+    for key in pool._views:
+        assert set(key) <= live, "view over a retired SSTable survived"
+    # dropping a live SSTable kills its residency and every view over it
+    tier = next(t for t in s.trees["t"].levels.lookup_tiers() if t)
+    sst = tier[0]
+    before = pool.stats()["resident_pages"]
+    s.disk.drop_sst(sst)
+    assert pool.stats()["resident_pages"] < before
+    assert all(sst.sst_id not in key for key in pool._views)
+
+
+# --------------------------- satellites -------------------------------------
+def test_bloom_memoized_and_invalidated():
+    s = LSMStore(small_config(device_pool_bytes=0))
+    s.create_tree("t")
+    t = s.trees["t"]
+    drive_store(s, batches=40, read_tail=2)
+    tier = next(ti for ti in t.levels.lookup_tiers() if ti)
+    f1 = t._bloom(tier[0])
+    f2 = t._bloom(tier[0])
+    assert f1 is f2, "per-SSTable Bloom must be memoized"
+    # more churn retires SSTables; the memo must only hold live ids
+    drive_store(s, batches=40, read_tail=0, seed=1)
+    live = {sst.sst_id for ti in t.l0.lookup_tiers() + t.levels.lookup_tiers()
+            for sst in ti}
+    assert set(t._bloom_cache) <= live, "stale Bloom memo entries"
+
+
+def test_jit_shape_cache_counters():
+    pb = PallasBackend(interpret=True)
+    rng = np.random.default_rng(2)
+    k = np.sort(rng.choice(10_000, 600, replace=False)).astype(np.int64)
+    c0, h0 = pb.jit_compiles, pb.jit_cache_hits
+    f = pb.bloom_build(k)
+    pb.bloom_probe(f, k[:100])
+    assert pb.jit_compiles > c0
+    c1, h1 = pb.jit_compiles, pb.jit_cache_hits
+    pb.bloom_probe(f, k[100:200])        # same pow2 bucket: cache hit
+    assert (pb.jit_compiles, pb.jit_cache_hits) == (c1, h1 + 1)
+    pb.bloom_probe(f, k[:550])           # new query bucket: recompile
+    assert pb.jit_compiles == c1 + 1
+    st = pb.jit_stats()
+    assert st["jit_compiles"] == pb.jit_compiles
+    assert st["jit_cache_hits"] == pb.jit_cache_hits
+
+
+def test_memory_plan_actuates_device_pool_budget():
+    class PinPool(MemoryGovernor):
+        def __init__(self, budget):
+            self.budget = budget
+
+        def observe(self, service):
+            return MemoryPlan(device_pool_bytes=self.budget,
+                              note="test-pin")
+
+    svc = StorageService(LSMStore(small_config(device_pool_bytes=0)),
+                         governor=PinPool(8 * MB))
+    svc.create_tree("t")
+    assert not svc.store.device_pool.enabled
+    ks = np.arange(256, dtype=np.int64)
+    svc.submit_strict([Put("t", ks, ks)])
+    assert svc.store.device_pool.budget_bytes == 8 * MB
+    assert svc.store.device_pool.enabled
+
+
+def test_device_pool_governor_grows_on_misses():
+    gov = DevicePoolGovernor(min_bytes=1 * MB, max_bytes=8 * MB,
+                             ops_cycle=256)
+    svc = StorageService(LSMStore(small_config(device_pool_bytes=1 * MB)),
+                         governor=gov)
+    svc.create_tree("t")
+    rng = np.random.default_rng(0)
+    for i in range(60):
+        ks = rng.integers(0, 30_000, 256)
+        if i % 3 != 2:
+            svc.submit_strict([Put("t", ks, ks * 3)])
+        svc.submit_strict([Get("t", rng.integers(0, 30_000, 256))])
+    # churn keeps tiers cold at 1MB -> misses dominate -> budget doubled
+    assert svc.store.device_pool.budget_bytes > 1 * MB
+    assert gov.records, "governor never decided"
+
+
+def test_device_pool_bytes_validation():
+    with pytest.raises(ValueError):
+        small_config(device_pool_bytes=-1).validate()
