@@ -146,7 +146,13 @@ def measure(store, fn) -> dict:
     measured window -- recompile churn from new pow2 buckets, e.g. the
     fused read path's tier stacks) land on the ``IOStats`` delta and the
     row; when the store runs a device page pool, the window's fused-tier
-    hit rate rides along as ``device_pool_hit_rate``."""
+    hit rate rides along as ``device_pool_hit_rate``.
+
+    When measuring a ``StorageService``, the window's request-latency and
+    maintenance-stall tails (from the service's streaming histograms)
+    land on the delta and the row as ``p50_us`` / ``p99_us`` /
+    ``p999_us`` / ``max_stall_us`` -- the tail-latency SLO columns."""
+    service = store if isinstance(store, StorageService) else None
     store = getattr(store, "store", store)     # unwrap a StorageService
     backend = getattr(store, "backend", None) \
         or get_backend(store.cfg.backend)
@@ -155,12 +161,21 @@ def measure(store, fn) -> dict:
     before = store.disk.stats.copy()
     js0 = backend.jit_stats()
     ps0 = pool.stats() if pool is not None else None
+    lat0 = service.latency.copy() if service is not None else None
+    stall0 = service.stall.copy() if service is not None else None
     fn()
     store.sync_mem_stats()
     d = store.disk.stats.delta(before)
     js1 = backend.jit_stats()
     d.jit_compiles = js1["jit_compiles"] - js0["jit_compiles"]
     d.jit_cache_hits = js1["jit_cache_hits"] - js0["jit_cache_hits"]
+    if service is not None:
+        dl = service.latency.delta(lat0)
+        ds = service.stall.delta(stall0)
+        d.lat_p50_us = dl.p50
+        d.lat_p99_us = dl.p99
+        d.lat_p999_us = dl.p999
+        d.max_stall_us = ds.max_value
     io, cpu = store.cfg.time_model.elapsed(d, scheme=store.cfg.scheme)
     ops = max(d.ops, 1)
     out = {
@@ -177,6 +192,11 @@ def measure(store, fn) -> dict:
         "jit_compiles": d.jit_compiles,
         "jit_cache_hits": d.jit_cache_hits,
     }
+    if service is not None:
+        out["p50_us"] = d.lat_p50_us
+        out["p99_us"] = d.lat_p99_us
+        out["p999_us"] = d.lat_p999_us
+        out["max_stall_us"] = d.max_stall_us
     if ps0 is not None:
         ps1 = pool.stats()
         dh = ps1["tier_hits"] - ps0["tier_hits"]

@@ -15,9 +15,16 @@ Two scenarios:
   staged pays one Bloom+search backend call per touched SSTable, so host
   lookup latency grows ~linearly in SSTable count; fused collapses the
   tier into one probe+search pass, growing sub-linearly.
+* **Paced maintenance** -- the same write-heavy stream under stop-the-world
+  ticks (every submit drains all merge debt in-line) vs the
+  ``MaintenancePacer`` (bounded merge slices released against the observed
+  write rate). Throughput is ~equal -- the same debt gets paid either
+  way -- but the paced tail (p999 request latency, max maintenance stall)
+  collapses because no single submit carries a whole merge cascade.
 """
 from __future__ import annotations
 
+import gc
 import time
 
 import numpy as np
@@ -28,8 +35,8 @@ from repro.core.tuner.tuner import TunerConfig
 from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
 from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
 
-from .common import (BASE, MB, Workload, bulk_load, fmt_row, make_service,
-                     make_sharded_service, measure)
+from .common import (BASE, KB, MB, Workload, bulk_load, fmt_row,
+                     make_service, make_sharded_service, measure)
 
 
 def drive(pool, tuner, n_ops, reuse_frac, rng, working_set=1600,
@@ -175,6 +182,68 @@ def read_hot_path(n_batches: int, *, sst_count=16, batch=256, fused=True):
     return m
 
 
+def paced_maintenance(n_ops: int, *, paced: bool, n_trees=2,
+                      n_records=120_000, write_mem_bytes=256 * KB,
+                      batch=128, windows=16, interval_bytes=16 * KB,
+                      segment_budget=1):
+    """Sustained write stream, stop-the-world vs paced maintenance.
+
+    ``paced=False`` runs the classic schedule: one full tick per submit,
+    draining every runnable merge in-line, so a submit that lands on a
+    flush pays the flush AND the merge work it unlocked (the p999
+    spike). ``paced=True`` routes the same submits through the service's
+    ``MaintenancePacer``: mandatory mem/log segments every pass, merge
+    debt paid in ``segment_budget``-step slices released per
+    ``interval_bytes`` of ingested payload and deferred past passes that
+    flushed -- the worst pass pays max(flush, slice) instead of their
+    sum. Wall-clock request-latency and maintenance-stall tails come
+    from the service histograms via ``measure``
+    (p50/p99/p999/max_stall columns).
+
+    The driver rotates write batches across ``windows`` disjoint key
+    ranges, so L0 runs form many non-overlapping groups (zipf streams
+    coalesce into one group and merge in single units) and the L0 byte
+    budget releases real multi-unit merge work for the schedulers to
+    place. The stream is pure writes: deferral trades transient read-amp
+    (L0 runs linger a few submits longer) for the write-stall tail, so
+    the read tail is the read_hot_path scenario's job, not this one's.
+    GC is parked during the measured window -- the tail columns are
+    wall-clock and a collection pause would charge an arbitrary
+    submit."""
+    kw = dict(write_memory_bytes=write_mem_bytes, max_log_bytes=8 * MB,
+              flush_policy="opt", l0_target_groups=64, l0_max_groups=64)
+    if paced:
+        kw.update(pacer_interval_bytes=interval_bytes,
+                  pacer_segment_budget=segment_budget)
+    svc = make_service(**kw)
+    names = [f"kv{i}" for i in range(n_trees)]
+    for name in names:
+        svc.create_tree(name)
+        bulk_load(svc.store, name, n_records)
+    rng = np.random.default_rng(13)
+    span = n_records // windows
+
+    def drive():
+        gc.disable()
+        try:
+            for i in range(n_ops // batch):
+                w = (i * 7919) % windows
+                ks = rng.integers(w * span, (w + 1) * span, size=batch)
+                svc.submit_strict([Put(names[i % n_trees], ks, ks + 1)])
+        finally:
+            gc.enable()
+            gc.collect()
+
+    m = measure(svc, drive)
+    sch = svc.store.scheduler
+    m["slices"] = svc.pacer.slices if svc.pacer is not None else 0
+    m["deferrals"] = svc.pacer.deferrals if svc.pacer is not None else 0
+    m["segments"] = sch.segments
+    m["ticks"] = sch.ticks
+    m["carried_debt"] = sch.carried_debt
+    return m
+
+
 def sharded_hot_shard(n_ops: int, *, shards=4, n_records=40_000,
                       write_mem_bytes=1 * MB, hot_frac=0.85,
                       write_frac=0.7, batch=256):
@@ -266,6 +335,19 @@ def run(full: bool = False, smoke: bool = False):
                 f"jit_compiles={m['jit_compiles']};"
                 f"jit_cache_hits={m['jit_cache_hits']};"
                 f"read_pages_per_op={m['read_pages_per_op']:.3f}"))
+    n_paced = 6_000 if smoke else (48_000 if full else 32_000)
+    for label, paced in (("stop_world", False), ("paced", True)):
+        m = paced_maintenance(
+            n_paced, paced=paced,
+            n_records=30_000 if smoke else 120_000)
+        rows.append(fmt_row(
+            f"kv_serving/paced_maintenance/{label}", m["throughput"],
+            f"p50_us={m['p50_us']:.1f};p99_us={m['p99_us']:.1f};"
+            f"p999_us={m['p999_us']:.1f};"
+            f"max_stall_us={m['max_stall_us']:.1f};"
+            f"stalls={m['stalls']};slices={m['slices']};"
+            f"deferrals={m['deferrals']};segments={m['segments']};"
+            f"ticks={m['ticks']};carried_debt={m['carried_debt']}"))
     n_shard = 6_000 if smoke else (60_000 if full else 24_000)
     for shards in ([4] if not full else [2, 4, 8]):
         m = sharded_hot_shard(n_shard, shards=shards,

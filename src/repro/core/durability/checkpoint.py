@@ -161,6 +161,7 @@ def capture_checkpoint(arena, scheduler) -> Checkpoint:
         shards=shards,
         payloads=payloads,
         scheduler={"ticks": scheduler.ticks,
+                   "segments": scheduler.segments,
                    "carried_debt": scheduler.carried_debt},
     )
 
@@ -280,5 +281,6 @@ def restore_checkpoint(store, ck: Checkpoint) -> None:
     arena.restore_write_memory(ck.write_memory_bytes)
     vars(arena.disk.stats).update(ck.iostats)
     store.scheduler.ticks = ck.scheduler["ticks"]
+    store.scheduler.segments = ck.scheduler.get("segments", 0)
     store.scheduler.carried_debt = ck.scheduler["carried_debt"]
     arena.manifest.reset_to_checkpoint(ck, live)

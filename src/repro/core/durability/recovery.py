@@ -66,11 +66,15 @@ def _apply(store, rec, wal) -> None:
             s.delete_batch(rec.tree, rec.keys, op=rec.op, tick=False)
     elif isinstance(rec, TickRecord):
         b = rec.merge_budget
-        if b == "default":
-            store.scheduler.tick()
+        kw = {} if b == "default" \
+            else {"merge_budget": None if b == "drain" else int(b)}
+        if rec.segment == "full":
+            store.scheduler.tick(**kw)
         else:
-            store.scheduler.tick(
-                merge_budget=None if b == "drain" else int(b))
+            # Paced schedules log one record per tick segment; replay
+            # re-runs exactly the logged segment at the logged point, so
+            # interleaved maintenance recovers bit-identically.
+            store.scheduler.run_segment(rec.segment, **kw)
     elif isinstance(rec, SetWriteMemoryRecord):
         store.arena.set_write_memory(rec.write_memory_bytes)
     else:                                         # pragma: no cover

@@ -106,12 +106,18 @@ class TreeCreateRecord:
 
 @dataclass(frozen=True, eq=False)
 class TickRecord:
-    """Control record: one maintenance-scheduler tick ran here, with the
-    given merge-budget override (``"default"`` = the scheduler's own
-    budget, ``"drain"`` = explicit None, or an int)."""
+    """Control record: one maintenance-scheduler tick -- or one resumable
+    tick *segment* -- ran here, with the given merge-budget override
+    (``"default"`` = the scheduler's own budget, ``"drain"`` = explicit
+    None, or an int). ``segment`` is ``"full"`` for a one-shot tick or a
+    ``scheduler.SEGMENTS`` name for a paced schedule's individual phase;
+    segment-granular records are what keep interleaved maintenance
+    replay-deterministic (recovery re-runs exactly the logged segment at
+    exactly the logged point)."""
 
     lsn0: int = 0
     merge_budget: object = "default"     # "default" | "drain" | int
+    segment: str = "full"                # "full" | a SEGMENTS name
 
     kind = K_TICK
     lsn_end = property(lambda self: self.lsn0)
@@ -162,6 +168,8 @@ def encode_record(rec: Record) -> bytes:
         b = rec.merge_budget
         flag = {"default": -2, "drain": -1}.get(b, 1)
         extra = 0 if isinstance(b, str) else int(b)
+        if rec.segment != "full":        # name slot carries the segment;
+            name = rec.segment.encode()  # empty name decodes as "full"
     else:                                    # K_SET_WRITE_MEMORY
         n = 0
         extra = int(rec.write_memory_bytes)
@@ -206,7 +214,8 @@ def decode_record(buf: bytes) -> Record:
             lsn0=lsn0)
     if kind == K_TICK:
         budget = {-2: "default", -1: "drain"}.get(flag, extra)
-        return TickRecord(lsn0=lsn0, merge_budget=budget)
+        return TickRecord(lsn0=lsn0, merge_budget=budget,
+                          segment=name or "full")
     if kind == K_SET_WRITE_MEMORY:
         return SetWriteMemoryRecord(write_memory_bytes=extra, lsn0=lsn0)
     raise ValueError(f"unknown WAL record kind {kind}")
@@ -330,13 +339,16 @@ class WriteAheadLog:
                                     entry_bytes=entry_bytes,
                                     lsn0=self._head))
 
-    def append_tick(self, merge_budget) -> None:
+    def append_tick(self, merge_budget, *, segment: str = "full") -> None:
         """Log a maintenance tick (``merge_budget``: "default" | "drain" |
-        int). Ticks are deterministic functions of store state, so logging
-        the trigger point (not its effects) is enough to replay them."""
+        int) or one resumable tick segment (``segment`` = a
+        ``scheduler.SEGMENTS`` name). Ticks and segments are deterministic
+        functions of store state, so logging the trigger point (not its
+        effects) is enough to replay them."""
         if self._replay is not None:
             return
-        self._push(TickRecord(lsn0=self._head, merge_budget=merge_budget))
+        self._push(TickRecord(lsn0=self._head, merge_budget=merge_budget,
+                              segment=segment))
 
     def append_set_write_memory(self, x: int) -> None:
         if self._replay is not None:

@@ -15,4 +15,6 @@ from .backend import (ENV_VAR, ExecutionBackend,  # noqa: F401
 from .numpy_backend import (NumpyBackend, ingest_order,  # noqa: F401
                             merge_runs_numpy)
 from .pallas_backend import PallasBackend  # noqa: F401
-from .scheduler import MaintenanceScheduler, TickReport  # noqa: F401
+from .pacer import MaintenancePacer  # noqa: F401
+from .scheduler import (SEGMENTS, MaintenanceScheduler,  # noqa: F401
+                        TickReport)

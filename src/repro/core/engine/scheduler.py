@@ -7,46 +7,56 @@ replaces the store's per-write inline enforcement: the write path only
 appends to memory components and then calls ``tick()``, and every flush or
 merge anywhere in the store flows through this class.
 
-A tick runs four phases:
+A tick runs five phases, each of which is also exposed as a *resumable
+tick segment* (``run_segment``) so a ``MaintenancePacer`` can interleave
+maintenance with foreground write batches instead of stopping the world:
 
-  1. **Memory-component upkeep** -- structures that do write-path-adjacent
-     work (Accordion's seal + pipeline merges, which can set
-     ``request_flush`` when a data merge's transient peak blows the
-     budget) run their ``upkeep_step`` units.
-  2. **Memory enforcement** (mandatory) -- static-scheme LRU dataset
-     evictions queued by the write path are flushed first; then, while
-     the shared write memory exceeds its threshold, pick a flush victim
-     by the configured §4.2 flush policy (max-memory / min-LSN /
+  1. **Memory-component upkeep** (segment ``"upkeep"``) -- structures that
+     do write-path-adjacent work (Accordion's seal + pipeline merges,
+     which can set ``request_flush`` when a data merge's transient peak
+     blows the budget) run their ``upkeep_step`` units, and static-scheme
+     LRU dataset evictions queued by the write path are flushed.
+  2. **Memory enforcement** (segment ``"mem"``, mandatory) -- while the
+     shared write memory exceeds its threshold, pick a flush victim by
+     the configured §4.2 flush policy (max-memory / min-LSN /
      write-rate-proportional OPT) and flush it. Runs to completion: the
      memory bound is a correctness invariant, not discretionary work.
-  3. **Log enforcement** (mandatory) -- while the log exceeds its cap,
-     flush the tree holding the minimum LSN (log-triggered flushes
-     facilitate truncation, §4.1.1).
-  4. **Merge pass** (discretionary, budgeted) -- rank all trees by their
-     ``merge_debt`` (pending memory merges + L0 groups over target +
-     over-full levels + L1 drains) and execute up to ``merge_budget``
-     maintenance steps, always against the tree with the largest debt.
-     Unspent debt carries to the next tick (``carried_debt``), modelling
-     bounded background-merge bandwidth; ``merge_budget=None`` (default)
-     drains all debt every tick.
-  5. **WAL enforcement** -- the durable twin of phase 3: physically
-     truncate the write-ahead log below the arena-global min-LSN (the
-     bytes the min-LSN flushes just made dead), taking a durable
-     checkpoint first whenever the watermark would pass the last
-     checkpoint (or the ``checkpoint_interval_bytes`` knob demands one),
-     so the retained tail always suffices for bit-identical replay. After
-     every tick ``wal.tail_bytes == store.log_length``.
+  3. **Log enforcement** (segment ``"log"``, mandatory) -- while the log
+     exceeds its cap, flush the tree holding the minimum LSN
+     (log-triggered flushes facilitate truncation, §4.1.1).
+  4. **Merge pass** (segment ``"merge"``, discretionary, budgeted) --
+     rank all trees by their ``merge_debt`` (pending memory merges + L0
+     groups over target + over-full levels + L1 drains) and execute up to
+     ``merge_budget`` maintenance steps, always against the tree with the
+     largest debt. Unspent debt carries to the next tick
+     (``carried_debt``), modelling bounded background-merge bandwidth;
+     ``merge_budget=None`` (default) drains all debt. A bounded merge
+     segment is a *slice*: repeated slices serve exactly the same
+     largest-debt-first step sequence a single draining pass would
+     (maintenance of one tree never changes another tree's debt), which
+     is what makes paced schedules bit-identical to stop-the-world ones
+     once the debt is drained.
+  5. **WAL enforcement** (segment ``"wal"``) -- the durable twin of
+     phase 3: physically truncate the write-ahead log below the
+     arena-global min-LSN (the bytes the min-LSN flushes just made dead),
+     taking a durable checkpoint first whenever the watermark would pass
+     the last checkpoint (or the ``checkpoint_interval_bytes`` knob
+     demands one), so the retained tail always suffices for bit-identical
+     replay. After every tick ``wal.tail_bytes == store.log_length``.
 
-Every tick is itself WAL-logged as a ``TickRecord`` *before* its phases
-run (write-ahead): ticks are pure functions of store state, so recovery
-re-runs them at the original trigger points and a crash mid-tick redoes
-the whole tick from its logged start.
+Every tick -- and every individually-run segment -- is WAL-logged as a
+``TickRecord`` *before* its phases run (write-ahead): ticks and segments
+are pure functions of store state, so recovery re-runs them at the
+original trigger points and a crash mid-segment redoes the whole segment
+from its logged start. A one-shot ``tick()`` logs ONE record with
+``segment="full"``; a paced schedule logs one record per segment, so any
+interleaving of segments and write batches replays deterministically.
 
 The scheduler holds no tree state of its own -- it reads candidates from
 the store each phase -- so ticks are a pure function of store state, which
 the differential test suite exploits: any interleaving of writes producing
-the same memory-component state followed by the same tick sequence yields
-bit-identical trees.
+the same memory-component state followed by the same tick-segment sequence
+yields bit-identical trees.
 """
 from __future__ import annotations
 
@@ -54,6 +64,9 @@ from dataclasses import dataclass
 
 _INF = 2**62
 _UNSET = object()      # tick(): "no override" vs an explicit None (=drain)
+
+# Resumable tick segments, in the canonical (one-shot tick) order.
+SEGMENTS = ("upkeep", "mem", "log", "merge", "wal")
 
 
 def _budget_tag(merge_budget):
@@ -90,7 +103,7 @@ def enforce_wal(arena, scheduler) -> None:
 
 @dataclass
 class TickReport:
-    """What one scheduler tick did (returned by ``tick``)."""
+    """What one scheduler tick (or tick segment) did."""
 
     flushes: int = 0          # flush events executed (mem- or log-triggered)
     upkeep_steps: int = 0     # memory-component upkeep units
@@ -129,14 +142,85 @@ def rank_flush_victim(cands, policy):
     return best
 
 
-class MaintenanceScheduler:
+class SegmentedScheduler:
+    """Shared tick/segment machinery of both schedulers.
+
+    Subclasses provide the five phase implementations (``_mem_upkeep`` /
+    ``_flush_pending`` / ``_enforce_memory`` / ``_enforce_log`` /
+    ``_run_merges``) plus ``_arena``; this base turns them into the
+    one-shot ``tick()`` and the resumable ``run_segment()`` -- both
+    WAL-logged write-ahead, so a one-shot tick and any interleaved segment
+    schedule are equally replay-deterministic.
+    """
+
+    merge_budget: int | None
+
+    def _init_counters(self, merge_budget: int | None) -> None:
+        self.merge_budget = merge_budget
+        self.ticks = 0          # one-shot (full) ticks executed
+        self.segments = 0       # individually-run tick segments executed
+        self.carried_debt = 0
+
+    def run_segment(self, name: str, *, merge_budget=_UNSET) -> TickReport:
+        """Run ONE tick segment. ``merge_budget`` applies to the
+        ``"merge"`` segment only (same override contract as ``tick``: an
+        explicit ``None`` drains all debt). Each segment is logged
+        write-ahead as its own ``TickRecord``, so any interleaving of
+        segments with write batches replays deterministically."""
+        if name not in SEGMENTS:
+            raise ValueError(f"unknown tick segment {name!r}; "
+                             f"expected one of {SEGMENTS}")
+        arena = self._arena()
+        arena.wal.append_tick(
+            _budget_tag(merge_budget) if name == "merge" else "default",
+            segment=name)
+        self.segments += 1
+        rep = TickReport()
+        if name == "upkeep":
+            rep.upkeep_steps = self._mem_upkeep()
+            rep.flushes = self._flush_pending()
+        elif name == "mem":
+            rep.flushes = self._enforce_memory()
+        elif name == "log":
+            rep.flushes = self._enforce_log()
+        elif name == "merge":
+            budget = self.merge_budget if merge_budget is _UNSET \
+                else merge_budget
+            rep.merge_steps = self._run_merges(budget)
+        else:                                     # "wal"
+            enforce_wal(arena, self)
+        rep.carried_debt = self.carried_debt
+        return rep
+
+    def tick(self, *, merge_budget=_UNSET) -> TickReport:
+        """One stop-the-world maintenance round: all five segments in
+        canonical order under ONE ``TickRecord``. ``merge_budget``
+        overrides the scheduler's default for this tick only; pass an
+        explicit ``None`` to drain all debt regardless of the default."""
+        arena = self._arena()
+        arena.wal.append_tick(_budget_tag(merge_budget), segment="full")
+        self.ticks += 1
+        rep = TickReport()
+        rep.upkeep_steps = self._mem_upkeep()
+        rep.flushes += self._flush_pending()
+        rep.flushes += self._enforce_memory()
+        rep.flushes += self._enforce_log()
+        budget = self.merge_budget if merge_budget is _UNSET else merge_budget
+        rep.merge_steps = self._run_merges(budget)
+        rep.carried_debt = self.carried_debt
+        enforce_wal(arena, self)
+        return rep
+
+
+class MaintenanceScheduler(SegmentedScheduler):
     """Arbitrates flush/merge work across every tree of one ``LSMStore``."""
 
     def __init__(self, store, *, merge_budget: int | None = None):
         self.store = store
-        self.merge_budget = merge_budget
-        self.ticks = 0
-        self.carried_debt = 0
+        self._init_counters(merge_budget)
+
+    def _arena(self):
+        return self.store.arena
 
     # -- flush candidate ranking (§4.2) --------------------------------------
     def pick_flush_tree(self):
@@ -181,6 +265,14 @@ class MaintenanceScheduler:
             while steps < 10_000 and t.mem.upkeep_step():
                 steps += 1
         return steps
+
+    def _flush_pending(self) -> int:
+        flushes = 0
+        while self.store._pending_evict:     # static-scheme LRU evictions
+            self.flush_dataset(self.store._pending_evict.pop(0),
+                               trigger="mem")
+            flushes += 1
+        return flushes
 
     def _enforce_memory(self) -> int:
         s, cfg = self.store, self.store.cfg
@@ -246,7 +338,9 @@ class MaintenanceScheduler:
 
         Debts are cached per tree and re-evaluated only for the tree just
         served: maintenance of one tree never changes another tree's
-        structures or share, so the cached ranking stays exact."""
+        structures or share, so the cached ranking stays exact -- and a
+        sequence of bounded slices serves exactly the step sequence one
+        draining pass would."""
         s = self.store
         steps = 0
         debts = {t.name: t.merge_debt(s._tree_share(t))
@@ -267,35 +361,13 @@ class MaintenanceScheduler:
         self.carried_debt = sum(debts.values())
         return steps
 
-    # -- the tick --------------------------------------------------------------
-    def tick(self, *, merge_budget=_UNSET) -> TickReport:
-        """One maintenance round over the whole store. ``merge_budget``
-        overrides the scheduler's default for this tick only; pass an
-        explicit ``None`` to drain all debt regardless of the default."""
-        arena = self.store.arena
-        arena.wal.append_tick(_budget_tag(merge_budget))
-        self.ticks += 1
-        rep = TickReport()
-        rep.upkeep_steps = self._mem_upkeep()
-        while self.store._pending_evict:     # static-scheme LRU evictions
-            self.flush_dataset(self.store._pending_evict.pop(0),
-                               trigger="mem")
-            rep.flushes += 1
-        rep.flushes += self._enforce_memory()
-        rep.flushes += self._enforce_log()
-        budget = self.merge_budget if merge_budget is _UNSET else merge_budget
-        rep.merge_steps = self._run_merges(budget)
-        rep.carried_debt = self.carried_debt
-        enforce_wal(arena, self)
-        return rep
 
-
-class ShardedMaintenanceScheduler:
+class ShardedMaintenanceScheduler(SegmentedScheduler):
     """Global maintenance arbiter of a sharded data plane.
 
     Each shard keeps its own ``MaintenanceScheduler`` (the flush/upkeep
     executor for that shard's trees), but nothing ticks them individually:
-    this class runs the same four tick phases *across all shards* under
+    this class runs the same tick phases *across all shards* under
     ONE write-memory budget, ONE log cap and ONE discretionary merge
     budget -- the paper's cross-tree arbitration lifted to cross-shard:
 
@@ -317,9 +389,10 @@ class ShardedMaintenanceScheduler:
     def __init__(self, stores, arena, *, merge_budget: int | None = None):
         self.stores = list(stores)
         self.arena = arena
-        self.merge_budget = merge_budget
-        self.ticks = 0
-        self.carried_debt = 0
+        self._init_counters(merge_budget)
+
+    def _arena(self):
+        return self.arena
 
     # -- global aggregates ----------------------------------------------------
     def _used(self) -> int:
@@ -341,6 +414,18 @@ class ShardedMaintenanceScheduler:
             self.arena.cfg.flush_policy)
 
     # -- tick phases (global twins of MaintenanceScheduler's) -----------------
+    def _mem_upkeep(self) -> int:
+        return sum(s.scheduler._mem_upkeep() for s in self.stores)
+
+    def _flush_pending(self) -> int:
+        flushes = 0
+        for s in self.stores:
+            while s._pending_evict:          # static-scheme LRU evictions
+                s.scheduler.flush_dataset(s._pending_evict.pop(0),
+                                          trigger="mem")
+                flushes += 1
+        return flushes
+
     def _enforce_memory(self) -> int:
         cfg = self.arena.cfg
         flushes = 0
@@ -436,25 +521,3 @@ class ShardedMaintenanceScheduler:
                 debts[k] = 0
         self.carried_debt = sum(debts.values())
         return steps
-
-    # -- the tick --------------------------------------------------------------
-    def tick(self, *, merge_budget=_UNSET) -> TickReport:
-        """One maintenance round over every shard (same override contract
-        as ``MaintenanceScheduler.tick``)."""
-        self.arena.wal.append_tick(_budget_tag(merge_budget))
-        self.ticks += 1
-        rep = TickReport()
-        for s in self.stores:
-            rep.upkeep_steps += s.scheduler._mem_upkeep()
-        for s in self.stores:
-            while s._pending_evict:          # static-scheme LRU evictions
-                s.scheduler.flush_dataset(s._pending_evict.pop(0),
-                                          trigger="mem")
-                rep.flushes += 1
-        rep.flushes += self._enforce_memory()
-        rep.flushes += self._enforce_log()
-        budget = self.merge_budget if merge_budget is _UNSET else merge_budget
-        rep.merge_steps = self._run_merges(budget)
-        rep.carried_debt = self.carried_debt
-        enforce_wal(self.arena, self)
-        return rep

@@ -38,6 +38,12 @@ class IOStats:
                                     # (both 0 on store paths; benchmark
                                     # windows populate them from
                                     # ExecutionBackend.jit_stats deltas)
+    lat_p50_us: float = 0.0         # request-latency tail of a measurement
+    lat_p99_us: float = 0.0         # window -- 0.0 on store paths;
+    lat_p999_us: float = 0.0        # benchmark windows populate them from
+    max_stall_us: float = 0.0       # the service's LatencyHistogram deltas
+                                    # (max_stall = longest maintenance
+                                    # pause inside one submit/drain call)
 
     def copy(self) -> "IOStats":
         return IOStats(**vars(self))

@@ -111,6 +111,13 @@ class StoreConfig:
     # all merge debt every tick). Mandatory memory/log enforcement is never
     # budgeted.
     merge_budget: int | None = None
+    # Paced maintenance (engine/pacer.py): with an interval set, the
+    # service replaces the per-submit stop-the-world tick with a paced
+    # schedule -- mandatory segments every submit, merges released in
+    # bounded slices of ``pacer_segment_budget`` steps, one slice per
+    # ``pacer_interval_bytes`` of ingested payload. None = pacing off.
+    pacer_interval_bytes: int | None = None
+    pacer_segment_budget: int = 8
     time_model: TimeModel = field(default_factory=TimeModel)
 
     def validate(self):
@@ -149,6 +156,16 @@ class StoreConfig:
                 f"checkpoint_interval_bytes must be positive (or None to "
                 f"checkpoint only when log truncation requires it), got "
                 f"{self.checkpoint_interval_bytes}")
+        if self.pacer_interval_bytes is not None \
+                and self.pacer_interval_bytes <= 0:
+            raise ValueError(
+                f"pacer_interval_bytes must be positive (or None to run "
+                f"stop-the-world ticks instead of paced maintenance), got "
+                f"{self.pacer_interval_bytes}")
+        if self.pacer_segment_budget <= 0:
+            raise ValueError(
+                f"pacer_segment_budget must be positive (merge steps per "
+                f"paced slice), got {self.pacer_segment_budget}")
         if self.write_memory_bytes + self.sim_cache_bytes \
                 > self.total_memory_bytes:
             raise ValueError(

@@ -10,7 +10,13 @@ door as an API:
     backend paths (``write_batch`` / ``read_batch`` / ``scan_batch``),
     and returns per-request typed results in submission order;
   * maintenance is amortized: ONE ``MaintenanceScheduler.tick()`` per
-    submit that executed writes, instead of one per write call;
+    submit that executed writes, instead of one per write call -- or,
+    with ``StoreConfig.pacer_interval_bytes`` set, a *paced* schedule
+    (``engine/pacer.py``): mandatory segments every submit, merges in
+    bounded slices paced against the observed write rate, every segment
+    WAL-logged so interleavings replay deterministically. Submit wall
+    time and maintenance stall durations stream into two
+    ``LatencyHistogram``s (``service.latency`` / ``service.stall``);
   * admission control converts L0 write stalls and write-memory overload
     into explicit ``Deferred`` responses (counted in
     ``IOStats.write_stalls``) instead of silent inline stalls; per-tenant
@@ -23,10 +29,13 @@ exactly the batched call a caller would have made on the concatenated keys.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
 
+from ...runtime.latency import LatencyHistogram
+from ..engine.pacer import MaintenancePacer
 from ..lsm.storage import LSMStore, POLICIES, StoreConfig
 from .governor import MemoryGovernor, MemoryPlan, StaticGovernor
 from .planner import PlanStep, build_plan
@@ -110,6 +119,23 @@ class StorageService:
         self.plans: list[MemoryPlan] = []        # applied governor decisions
         self.sessions: dict[str, Session] = {}
         self.submits = 0
+        # Tail latency is first-class: every submit records its wall time
+        # (once per request) and the duration of its inline maintenance
+        # (the foreground stall). Window deltas feed the BENCH_*.json
+        # p99/p999/max_stall columns.
+        self.latency = LatencyHistogram()        # submit wall time, us
+        self.stall = LatencyHistogram()          # maintenance pauses, us
+        # Paced maintenance replaces the per-submit stop-the-world tick
+        # when the store opts in (StoreConfig.pacer_interval_bytes). The
+        # pacer is rebuilt (accumulator zero) on recovery by design:
+        # pacing is a performance policy, never replayed state.
+        cfg = store.cfg
+        self.pacer = None
+        if cfg.pacer_interval_bytes is not None:
+            self.pacer = MaintenancePacer(
+                store.scheduler,
+                segment_budget=cfg.pacer_segment_budget,
+                interval_bytes=cfg.pacer_interval_bytes)
 
     @classmethod
     def open(cls, store_cfg: StoreConfig, **kw) -> "StorageService":
@@ -205,8 +231,10 @@ class StorageService:
 
     def drain(self, max_ticks: int | None = None) -> int:
         """Catch-up maintenance: tick with an unbounded merge budget until
-        no tree is L0-stalled and write memory is back under its threshold
-        (or the tick cap). Returns ticks executed. The explicit pair to a
+        no tree is L0-stalled, write memory is back under its threshold
+        and no merge debt is carried (paced schedules defer slices, so a
+        drain must also pay whatever the pacer left outstanding), or the
+        tick cap is hit. Returns ticks executed. The explicit pair to a
         ``Deferred`` response: drain, then resubmit."""
         cap = max_ticks if max_ticks is not None else self.cfg.max_drain_ticks
         s = self.store
@@ -214,9 +242,12 @@ class StorageService:
         for _ in range(cap):
             over_mem = s.write_memory_used() \
                 > s.cfg.mem_flush_threshold * s.write_memory_bytes
-            if not over_mem and not self.stalled_trees():
+            if not over_mem and not self.stalled_trees() \
+                    and s.scheduler.carried_debt == 0:
                 break
+            tm = time.perf_counter()
             s.scheduler.tick(merge_budget=None)   # drain all debt
+            self.stall.record((time.perf_counter() - tm) * 1e6)
             done += 1
         return done
 
@@ -269,6 +300,7 @@ class StorageService:
         results in submission order (``Deferred`` for refused writes --
         over a sharded store, refusal is per shard, and a Deferred may
         carry a request narrowed to the keys that did not execute)."""
+        t0 = time.perf_counter()
         requests = list(requests)
         plan = build_plan(requests,
                           router=getattr(self.store, "router", None))
@@ -279,6 +311,7 @@ class StorageService:
             session._begin_submit()
         results: list = [None] * plan.n_requests
         wrote = False
+        wrote_bytes = 0          # ingested payload, drives the pacer
         # Per write-request bookkeeping: a sharded request spans one step
         # per shard, so acks/deferrals aggregate after all steps ran.
         w_req = {i: r for i, r in enumerate(requests)
@@ -299,6 +332,7 @@ class StorageService:
                         w_defer.setdefault(i, ([], reason))[0].append(sel)
                     continue
                 wrote = True
+                wrote_bytes += step.n_keys * self._step_tree(step).entry_bytes
             self._execute_step(step, results, count_ops)
             if session is not None:
                 session.stats.executed_keys += step.n_keys
@@ -317,10 +351,17 @@ class StorageService:
         if session is not None:
             session.stats.submitted_keys += sum(s.n_keys for s in plan.steps)
         if wrote:
-            self.store.scheduler.tick()
+            tm = time.perf_counter()
+            if self.pacer is not None:
+                self.pacer.on_submit(wrote_bytes)
+            else:
+                self.store.scheduler.tick()
+            self.stall.record((time.perf_counter() - tm) * 1e6)
         mem_plan = self.governor.observe(self)
         if mem_plan is not None:
             self._apply_plan(mem_plan)
+        self.latency.record((time.perf_counter() - t0) * 1e6,
+                            n=plan.n_requests)
         return results
 
     def submit_all(self, requests, *, session: Session | None = None,

@@ -1,0 +1,210 @@
+"""Property tests for the streaming latency histogram (runtime/latency.py).
+
+The BENCH tail columns (p99_us / p999_us / max_stall_us) are only as
+trustworthy as this structure, so the error contract is tested directly:
+for any sample set and any quantile, ``true <= estimate <= true * gamma``
+(log-bucketed bound), merges are exact (associative + commutative), the
+window max from ``delta()`` is exact or gamma-bounded, and the edge cases
+(empty, one sample) behave.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.runtime.latency import LatencyHistogram
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def hist_of(values, **kw):
+    h = LatencyHistogram(**kw)
+    for v in values:
+        h.record(v)
+    return h
+
+
+def check_quantile_bounds(h, values, qs=(0.0, 0.1, 0.5, 0.9, 0.99,
+                                         0.999, 1.0)):
+    """The log-bucket error contract against the exact order statistic."""
+    vs = np.sort(np.asarray(values, float))
+    for q in qs:
+        # the estimator targets the ceil(q*n)-th order statistic
+        true = vs[max(1, math.ceil(q * len(vs))) - 1]
+        est = h.quantile(q)
+        assert est >= true * (1 - 1e-12), (q, true, est)
+        assert est <= max(true * h.gamma, h.v0) * (1 + 1e-12), (q, true, est)
+
+
+# --------------------------- edges ---------------------------------------------
+def test_empty_histogram():
+    h = LatencyHistogram()
+    assert h.count == 0
+    assert h.p50 == h.p99 == h.p999 == 0.0
+    assert h.max_value == 0.0 and h.min_value == 0.0
+
+
+def test_one_sample_is_exact():
+    """Clamping estimates into [min, max] makes a single sample exact at
+    every quantile -- whatever bucket it landed in."""
+    for v in (0.0, 1e-6, 0.4, 1.0, 137.2, 9e9):
+        h = hist_of([v])
+        for q in (0.0, 0.5, 0.99, 1.0):
+            assert h.quantile(q) == v, (v, q)
+        assert h.max_value == v and h.min_value == v
+
+
+def test_zero_and_subresolution_values():
+    """Values at or below v0 share bucket 0 but min/max stay exact."""
+    h = hist_of([0.0, 1e-9, 5e-4])
+    assert h.count == 3
+    assert h.min_value == 0.0 and h.max_value == 5e-4
+    assert h.quantile(1.0) == 5e-4
+
+
+def test_rejects_invalid_input():
+    h = LatencyHistogram()
+    with pytest.raises(ValueError, match=">= 0"):
+        h.record(-1.0)
+    with pytest.raises(ValueError, match="quantile"):
+        h.quantile(1.5)
+    with pytest.raises(ValueError, match="gamma"):
+        LatencyHistogram(gamma=1.0)
+    with pytest.raises(ValueError, match="v0"):
+        LatencyHistogram(v0=0.0)
+    h.record(1.0, n=0)               # no-op, not an error
+    assert h.count == 0
+
+
+# --------------------------- quantile error bound ------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_quantile_error_bound_random_samples(seed):
+    rng = np.random.default_rng(seed)
+    # heavy-tailed: spans ~6 decades, like microsecond latencies do
+    values = np.exp(rng.normal(3.0, 2.5, 4000))
+    h = hist_of(values)
+    check_quantile_bounds(h, values)
+    assert h.max_value == values.max()
+    assert h.min_value == values.min()
+
+
+def test_weighted_record_equals_repeats():
+    a = LatencyHistogram()
+    b = LatencyHistogram()
+    a.record(17.0, n=500)
+    for _ in range(500):
+        b.record(17.0)
+    assert a.count == b.count == 500
+    assert a._counts == b._counts
+    assert a.p999 == b.p999 == 17.0
+
+
+# --------------------------- merge algebra -------------------------------------
+def test_merge_is_exact_and_associative():
+    rng = np.random.default_rng(9)
+    parts = [np.exp(rng.normal(2, 2, n)) for n in (400, 50, 1300)]
+    hs = [hist_of(p) for p in parts]
+    whole = hist_of(np.concatenate(parts))
+    merged_lr = hs[0].merge(hs[1]).merge(hs[2])
+    merged_rl = hs[0].merge(hs[1].merge(hs[2]))
+    for m in (merged_lr, merged_rl):
+        assert m._counts == whole._counts       # exact counts
+        assert m.count == whole.count
+        assert m.max_value == whole.max_value
+        assert m.min_value == whole.min_value
+    # commutative
+    ab, ba = hs[0].merge(hs[1]), hs[1].merge(hs[0])
+    assert ab._counts == ba._counts and ab.count == ba.count
+
+
+def test_merge_rejects_geometry_mismatch():
+    with pytest.raises(ValueError, match="geometry"):
+        LatencyHistogram(gamma=2.0).merge(LatencyHistogram())
+
+
+def test_merge_with_empty_is_identity():
+    h = hist_of([1.0, 2.0, 300.0])
+    m = h.merge(LatencyHistogram())
+    assert m._counts == h._counts
+    assert m.max_value == h.max_value and m.count == h.count
+
+
+# --------------------------- snapshot / delta ----------------------------------
+def test_delta_recovers_the_window():
+    rng = np.random.default_rng(4)
+    h = LatencyHistogram()
+    for v in np.exp(rng.normal(2, 1, 500)):
+        h.record(v)
+    before = h.copy()
+    window = np.exp(rng.normal(5, 1, 300))       # hotter than the prefix
+    for v in window:
+        h.record(v)
+    d = h.delta(before)
+    assert d.count == 300
+    # the window grew the global max, so the window max is EXACT
+    assert d.max_value == window.max()
+    check_quantile_bounds(d, window, qs=(0.5, 0.9, 0.99))
+
+
+def test_delta_window_max_bounded_when_not_global_max():
+    h = LatencyHistogram()
+    h.record(1000.0)                  # global max lives in the prefix
+    before = h.copy()
+    h.record(3.0)
+    h.record(7.0)
+    d = h.delta(before)
+    assert d.count == 2
+    # max not recoverable exactly -- bounded by the top delta bucket edge
+    assert 7.0 <= d.max_value <= 7.0 * d.gamma
+    assert d.quantile(1.0) <= 7.0 * d.gamma
+
+
+def test_delta_of_identical_snapshots_is_empty():
+    h = hist_of([1.0, 2.0])
+    d = h.delta(h.copy())
+    assert d.count == 0 and d.max_value == 0.0
+
+
+def test_delta_rejects_non_prefix():
+    h = hist_of([5.0])
+    other = hist_of([5.0, 5.0])
+    with pytest.raises(ValueError, match="snapshot"):
+        h.delta(other)
+
+
+# --------------------------- hypothesis ----------------------------------------
+if HAVE_HYPOTHESIS:
+    sample_lists = st.lists(
+        st.floats(min_value=0.0, max_value=1e12, allow_nan=False,
+                  allow_infinity=False),
+        min_size=1, max_size=300)
+
+    @settings(max_examples=80, deadline=None)
+    @given(sample_lists)
+    def test_hypothesis_quantile_bounds(values):
+        check_quantile_bounds(hist_of(values), values)
+
+    @settings(max_examples=50, deadline=None)
+    @given(sample_lists, sample_lists)
+    def test_hypothesis_merge_equals_concat(a, b):
+        m = hist_of(a).merge(hist_of(b))
+        whole = hist_of(a + b)
+        assert m._counts == whole._counts
+        assert m.count == whole.count
+        assert m.max_value == whole.max_value
+        check_quantile_bounds(m, a + b, qs=(0.5, 0.99))
+
+    @settings(max_examples=50, deadline=None)
+    @given(sample_lists, sample_lists)
+    def test_hypothesis_delta_equals_window(prefix, window):
+        h = hist_of(prefix)
+        before = h.copy()
+        for v in window:
+            h.record(v)
+        d = h.delta(before)
+        assert d.count == len(window)
+        assert d._counts == hist_of(window)._counts

@@ -21,9 +21,8 @@ import pytest
 
 from repro.core.durability import (RECOVERY_EXACT_COUNTERS,
                                    DeleteBatchRecord, TickRecord,
-                                   TreeCreateRecord, WriteAheadLog,
-                                   WriteBatchRecord, decode_record,
-                                   encode_record, recover)
+                                   TreeCreateRecord, WriteBatchRecord,
+                                   decode_record, encode_record, recover)
 from repro.core.durability.wal import SetWriteMemoryRecord
 from repro.core.lsm.sstable import reset_sst_ids
 from repro.core.lsm.storage import LSMStore, StoreConfig
@@ -95,6 +94,12 @@ def test_wal_record_roundtrip_fixed():
     for budget in ("default", "drain", 0, 7):
         out = _roundtrip(TickRecord(lsn0=99, merge_budget=budget))
         assert out.merge_budget == budget and out.lsn0 == 99
+        assert out.segment == "full"
+        # segment-granular tick records (paced maintenance) round-trip
+        for seg in ("upkeep", "mem", "log", "merge", "wal"):
+            out = _roundtrip(TickRecord(lsn0=7, merge_budget=budget,
+                                        segment=seg))
+            assert (out.merge_budget, out.segment) == (budget, seg)
 
     out = _roundtrip(SetWriteMemoryRecord(write_memory_bytes=1 << 22,
                                           lsn0=10))
@@ -437,6 +442,90 @@ def test_checkpoint_interval_bounds_replay_tail():
     unbounded = replayed(None)
     bounded = replayed(256 * KB)
     assert bounded < unbounded
+
+
+# --------------------------- segment-boundary crash matrix ---------------------
+@pytest.mark.parametrize("shards", [1, 4])
+def test_crash_at_every_segment_boundary(shards):
+    """Paced maintenance logs one TickRecord per resumable segment; a
+    crash landing BETWEEN logged segments must recover bit-identically --
+    every segment boundary of a random interleaved schedule is a crash
+    point, not just batch boundaries."""
+    from repro.core.engine.scheduler import SEGMENTS
+    cfg = small_config()
+    reset_sst_ids()
+    store = ShardedStore(cfg, shards=shards)
+    for t in TREES:
+        store.create_tree(t)
+    rng = np.random.default_rng(41)
+    snaps = []
+
+    def snap():
+        snaps.append({"wal": store.wal.clone(),
+                      "manifest": store.manifest.clone(),
+                      "fp": sharded_fingerprint(store),
+                      "counters": exact_counters(store),
+                      "log_pos": store.log_pos,
+                      "carried_debt": store.scheduler.carried_debt})
+
+    for _ in range(12):
+        t = TREES[int(rng.integers(0, 2))]
+        ks = rng.integers(0, KEY_SPACE, int(rng.integers(80, 260)))
+        store.write_batch(t, ks, ks + 3, tick=False)
+        # a paced pass: mandatory segments + a bounded merge slice, with
+        # a crash point captured after EVERY segment
+        for name in SEGMENTS:
+            if name == "merge":
+                store.scheduler.run_segment(name, merge_budget=2)
+            else:
+                store.scheduler.run_segment(name)
+            snap()
+    assert len(snaps) == 12 * len(SEGMENTS)
+    for bi, s in enumerate(snaps):
+        recovered = recover(cfg, s["wal"], s["manifest"])
+        assert sharded_fingerprint(recovered) == s["fp"], f"boundary {bi}"
+        assert exact_counters(recovered) == s["counters"], f"boundary {bi}"
+        assert recovered.log_pos == s["log_pos"], f"boundary {bi}"
+        assert recovered.scheduler.carried_debt == s["carried_debt"], \
+            f"boundary {bi}"
+
+
+def test_crash_mid_segment_redoes_the_segment():
+    """Segments are logged write-ahead: a crash after a segment's record
+    landed but before (or while) its phase ran redoes exactly that
+    segment -- the segment-granular twin of the mid-tick redo case."""
+    cfg = small_config()
+    reset_sst_ids()
+    store = ShardedStore(cfg, shards=2)
+    store.create_tree("a")
+    rng = np.random.default_rng(6)
+    for _ in range(6):
+        store.write_batch("a", rng.integers(0, KEY_SPACE, 300),
+                          rng.integers(0, 2**31, 300), tick=False)
+        store.scheduler.run_segment("upkeep")
+    # hand-open the "mem" segment: log it write-ahead, then CRASH before
+    # the flush phase runs (run_segment = append_tick + phase)
+    sch = store.scheduler
+    store.wal.append_tick("default", segment="mem")
+    sch.segments += 1
+    wal_c, man_c = store.wal.clone(), store.manifest.clone()
+    # reference: the segment completes on the live store
+    sch._enforce_memory()
+    ref_fp = sharded_fingerprint(store)
+    recovered = recover(cfg, wal_c, man_c)
+    assert sharded_fingerprint(recovered) == ref_fp
+    assert exact_counters(recovered) == exact_counters(store)
+    assert recovered.scheduler.segments == sch.segments
+
+    # same for a bounded merge segment: record down, phase not yet run
+    store.wal.append_tick(2, segment="merge")
+    sch.segments += 1
+    wal_c, man_c = store.wal.clone(), store.manifest.clone()
+    sch._run_merges(2)
+    recovered = recover(cfg, wal_c, man_c)
+    assert sharded_fingerprint(recovered) == sharded_fingerprint(store)
+    assert exact_counters(recovered) == exact_counters(store)
+    assert recovered.scheduler.carried_debt == sch.carried_debt
 
 
 def test_crash_mid_maintenance_redoes_the_tick():

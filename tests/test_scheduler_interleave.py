@@ -1,0 +1,466 @@
+"""Deterministic-interleaving fuzzer for the paced maintenance pipeline.
+
+The tentpole invariants behind ``engine/pacer.py``:
+
+  1. **Segmentation is exact**: running the five tick segments in
+     canonical order is bit-identical -- store structure, full IOStats,
+     log position, carried debt -- to one stop-the-world ``tick()``.
+  2. **Interleavings are deterministic**: any random schedule of tick
+     segments interleaved with random write/delete batches produces the
+     same store twice, and (because every segment is WAL-logged
+     write-ahead) ``recover()`` replays the schedule bit-identically.
+  3. **Slices are just placement**: at a quiescent point, draining merge
+     debt in bounded slices equals draining it in one pass.
+  4. **Pacing is a performance policy**: a paced ``StorageService`` is
+     logically equal to a stop-the-world one (same answers, same
+     enforced bounds) and crash-recovers bit-identically.
+
+Hypothesis-driven when available (random schedules from a drawn seed);
+a fixed seed matrix runs regardless. CI runs this file on numpy and
+pallas-interpret (``REPRO_LSM_BACKEND``) via the maintenance-parity job.
+"""
+import numpy as np
+import pytest
+
+from repro.core.durability import recover
+from repro.core.engine.pacer import MAX_DEFER_DEBT_SLICES, MaintenancePacer
+from repro.core.engine.scheduler import SEGMENTS
+from repro.core.lsm.sstable import reset_sst_ids
+from repro.core.lsm.storage import StoreConfig
+from repro.core.service import Get, Put, ServiceConfig, StorageService
+from repro.core.shard import ShardedStore
+
+from test_differential import KB, MB, fingerprint
+from test_recovery import exact_counters, sharded_fingerprint
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+TREES = ("a", "b")
+KEY_SPACE = 2000
+
+
+def small_config(**kw):
+    base = dict(
+        total_memory_bytes=32 * MB, write_memory_bytes=256 * KB,
+        sim_cache_bytes=1 * MB, page_bytes=4 * KB, entry_bytes=256,
+        active_sstable_bytes=32 * KB, sstable_bytes=64 * KB,
+        max_log_bytes=512 * KB, scheme="partitioned", flush_policy="lsn")
+    base.update(kw)
+    return StoreConfig(**base)
+
+
+def build(cfg, shards):
+    reset_sst_ids()
+    store = ShardedStore(cfg, shards=shards)
+    for t in TREES:
+        store.create_tree(t)
+    return store
+
+
+def state_of(store):
+    """Everything that must be bit-identical: structure, FULL IOStats,
+    log position, scheduler debt."""
+    return (sharded_fingerprint(store), vars(store.disk.stats).copy(),
+            store.log_pos, store.scheduler.carried_debt)
+
+
+# --------------------------- 1. segmentation is exact --------------------------
+@pytest.mark.parametrize("shards", [1, 4])
+@pytest.mark.parametrize("scheme", ["partitioned", "btree-dynamic",
+                                    "accordion-data"])
+def test_canonical_segment_pass_equals_one_shot_tick(shards, scheme):
+    """Writes + [all 5 segments in canonical order] == writes + tick(),
+    for every scheme and shard count, at every boundary."""
+    cfg = small_config(scheme=scheme,
+                       flush_policy="mem" if scheme != "partitioned"
+                       else "lsn")
+    rng = np.random.default_rng(7)
+    batches = [(TREES[int(rng.integers(0, 2))],
+                rng.integers(0, KEY_SPACE, int(rng.integers(50, 250))),
+                int(rng.integers(0, 2**31)))
+               for _ in range(18)]
+
+    def run(segmented):
+        store = build(cfg, shards)
+        states = []
+        for t, ks, vseed in batches:
+            vs = np.random.default_rng(vseed).integers(0, 2**31, len(ks))
+            store.write_batch(t, ks, vs, tick=False)
+            if segmented:
+                for name in SEGMENTS:
+                    store.scheduler.run_segment(name)
+            else:
+                store.scheduler.tick()
+            states.append(state_of(store))
+        return states
+
+    seg, one = run(True), run(False)
+    for bi, (a, b) in enumerate(zip(seg, one)):
+        assert a == b, f"boundary {bi} diverged"
+
+
+def test_run_segment_rejects_unknown_name():
+    store = build(small_config(), shards=1)
+    with pytest.raises(ValueError, match="unknown tick segment"):
+        store.scheduler.run_segment("compact")
+    # bare LSMStore scheduler validates too
+    with pytest.raises(ValueError, match="unknown tick segment"):
+        store.shards[0].store.scheduler.run_segment("")
+
+
+# --------------------------- 2. interleavings are deterministic ----------------
+def gen_schedule(seed, n_events=34):
+    """Random interleaving of write/delete batches, individual tick
+    segments (random merge budgets), and write-memory resizes."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for _ in range(n_events):
+        r = rng.random()
+        if r < 0.40:
+            events.append(("write", TREES[int(rng.integers(0, 2))],
+                           int(rng.integers(0, 2**31)),
+                           int(rng.integers(40, 220))))
+        elif r < 0.52:
+            events.append(("delete", TREES[int(rng.integers(0, 2))],
+                           int(rng.integers(0, 2**31)),
+                           int(rng.integers(10, 80))))
+        elif r < 0.92:
+            name = SEGMENTS[int(rng.integers(0, len(SEGMENTS)))]
+            budget = "default"
+            if name == "merge":
+                budget = [None, "default", 1,
+                          int(rng.integers(2, 9))][int(rng.integers(0, 4))]
+            events.append(("segment", name, budget))
+        else:
+            events.append(("setmem", int(rng.integers(256, 640)) * KB))
+    # always settle with one canonical pass so min-LSN/truncation advance
+    for name in SEGMENTS:
+        events.append(("segment", name, None if name == "merge"
+                       else "default"))
+    return events
+
+
+def apply_event(store, ev, oracle):
+    kind = ev[0]
+    if kind == "write":
+        _, t, seed, size = ev
+        rng = np.random.default_rng(seed)
+        ks = rng.integers(0, KEY_SPACE, size)
+        vs = rng.integers(0, 2**31, size)
+        store.write_batch(t, ks, vs, tick=False)
+        oracle[t].update(zip(ks.tolist(), vs.tolist()))
+    elif kind == "delete":
+        _, t, seed, size = ev
+        ks = np.random.default_rng(seed).integers(0, KEY_SPACE, size)
+        store.delete_batch(t, ks, tick=False)
+        for k in ks.tolist():
+            oracle[t][k] = None
+    elif kind == "segment":
+        _, name, budget = ev
+        if budget == "default":
+            store.scheduler.run_segment(name)
+        else:
+            store.scheduler.run_segment(name, merge_budget=budget)
+    else:
+        store.set_write_memory(ev[1])
+
+
+def run_schedule(cfg, events, shards):
+    store = build(cfg, shards)
+    oracle = {t: {} for t in TREES}
+    for ev in events:
+        apply_event(store, ev, oracle)
+    return store, oracle
+
+
+def check_interleaving(seed, shards):
+    cfg = small_config()
+    events = gen_schedule(seed)
+    store, oracle = run_schedule(cfg, events, shards)
+    # determinism: the same schedule produces the same store twice
+    again, _ = run_schedule(cfg, events, shards)
+    assert state_of(again) == state_of(store), f"seed {seed} nondeterministic"
+    # replay determinism: recover() re-runs the logged interleaving
+    rec = recover(cfg, store.wal.clone(), store.manifest.clone())
+    assert sharded_fingerprint(rec) == sharded_fingerprint(store), \
+        f"seed {seed} replay diverged"
+    assert exact_counters(rec) == exact_counters(store)
+    assert rec.log_pos == store.log_pos
+    assert rec.scheduler.carried_debt == store.scheduler.carried_debt
+    # results: live and recovered stores answer the oracle identically
+    for t, d in oracle.items():
+        ks = np.fromiter(d.keys(), np.int64, len(d))
+        if not len(ks):
+            continue
+        f_live, v_live = store.read_batch(t, ks)
+        f_rec, v_rec = rec.read_batch(t, ks)
+        np.testing.assert_array_equal(f_live, f_rec)
+        np.testing.assert_array_equal(v_live[f_live], v_rec[f_rec])
+        for i, k in enumerate(ks.tolist()):
+            want = d[k]
+            assert bool(f_live[i]) == (want is not None), (t, k)
+            if want is not None:
+                assert int(v_live[i]) == want, (t, k)
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_interleaved_schedule_deterministic_and_replayable(seed, shards):
+    check_interleaving(seed, shards)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 4]))
+    def test_hypothesis_interleaved_schedules(seed, shards):
+        check_interleaving(seed, shards)
+
+
+# --------------------------- 3. slices are just placement ----------------------
+@pytest.mark.parametrize("shards", [1, 4])
+@pytest.mark.parametrize("slice_budget", [1, 3])
+def test_merge_slices_until_dry_equal_one_drain(shards, slice_budget):
+    """At a quiescent point (no intervening flushes) bounded merge slices
+    serve exactly the step sequence one draining pass would."""
+    cfg = small_config()
+
+    def load(store):
+        rng = np.random.default_rng(3)
+        for _ in range(30):
+            t = TREES[int(rng.integers(0, 2))]
+            ks = rng.integers(0, KEY_SPACE, 300)
+            store.write_batch(t, ks, ks + 1, tick=False)
+            # mandatory enforcement only: flushes pile up merge debt
+            for name in ("upkeep", "mem", "log"):
+                store.scheduler.run_segment(name)
+
+    drain = build(cfg, shards)
+    load(drain)
+    drain.scheduler.run_segment("merge", merge_budget=None)
+    drain.scheduler.run_segment("wal")
+    assert drain.scheduler.carried_debt == 0
+
+    sliced = build(cfg, shards)
+    load(sliced)
+    slices = 0
+    while True:
+        rep = sliced.scheduler.run_segment("merge",
+                                           merge_budget=slice_budget)
+        slices += 1
+        if rep.carried_debt == 0:
+            break
+        assert slices < 10_000
+    sliced.scheduler.run_segment("wal")
+    assert slices > 1          # the budget actually sliced the pass
+    assert state_of(sliced) == state_of(drain)
+    # and the sliced schedule replays bit-identically too
+    rec = recover(cfg, sliced.wal.clone(), sliced.manifest.clone())
+    assert sharded_fingerprint(rec) == sharded_fingerprint(sliced)
+    assert exact_counters(rec) == exact_counters(sliced)
+
+
+# --------------------------- 4. pacing is a performance policy -----------------
+def _service(cfg, shards):
+    reset_sst_ids()
+    svc = StorageService(ShardedStore(cfg, shards=shards),
+                         config=ServiceConfig(admission=False))
+    for t in TREES:
+        svc.create_tree(t)
+    return svc
+
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_paced_service_logically_equals_stop_the_world(shards):
+    """Same submits through a paced and a stop-the-world service: every
+    read answers the oracle on both, the memory/log bounds hold on both,
+    and the paced service crash-recovers bit-identically."""
+    base = small_config()
+    paced_cfg = small_config(pacer_interval_bytes=32 * KB,
+                             pacer_segment_budget=2)
+    rng = np.random.default_rng(11)
+    submits = []
+    for _ in range(30):
+        t = TREES[int(rng.integers(0, 2))]
+        ks = rng.integers(0, KEY_SPACE, int(rng.integers(80, 260)))
+        vs = rng.integers(0, 2**31, len(ks))
+        submits.append((t, ks, vs))
+
+    oracle = {t: {} for t in TREES}
+    for t, ks, vs in submits:
+        oracle[t].update(zip(ks.tolist(), vs.tolist()))
+
+    stores = {}
+    for label, cfg in (("world-stop", base), ("paced", paced_cfg)):
+        svc = _service(cfg, shards)
+        assert (svc.pacer is not None) == (label == "paced")
+        for t, ks, vs in submits:
+            svc.submit([Put(t, ks, vs)])
+            s = svc.store
+            # the mandatory bounds hold after EVERY submit, paced or not
+            assert s.write_memory_used() \
+                <= cfg.mem_flush_threshold * s.write_memory_bytes
+            assert s.log_length \
+                <= cfg.mem_flush_threshold * cfg.max_log_bytes
+        for t, d in oracle.items():
+            ks = np.fromiter(d.keys(), np.int64, len(d))
+            res = svc.submit([Get(t, ks)])[0]
+            assert res.found.all()
+            assert res.vals.tolist() == [d[k] for k in ks.tolist()]
+        stores[label] = svc
+
+    paced = stores["paced"]
+    assert paced.pacer.slices > 0
+    assert paced.store.scheduler.segments > 0
+    assert stores["world-stop"].store.scheduler.segments == 0
+    # submit latency + maintenance stalls were recorded
+    assert paced.latency.count > 0 and paced.stall.count > 0
+    # paced schedule crash-recovers bit-identically
+    rec = recover(paced_cfg, paced.store.wal.clone(),
+                  paced.store.manifest.clone())
+    assert sharded_fingerprint(rec) == sharded_fingerprint(paced.store)
+    assert exact_counters(rec) == exact_counters(paced.store)
+    assert rec.scheduler.segments == paced.store.scheduler.segments
+
+
+def test_paced_service_drain_converges_and_is_replayable():
+    """drain() after a paced run clears all carried debt and the full
+    schedule (paced passes + drain ticks) still replays exactly."""
+    cfg = small_config(pacer_interval_bytes=64 * KB,
+                       pacer_segment_budget=1)
+    svc = _service(cfg, shards=2)
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        ks = rng.integers(0, KEY_SPACE, 250)
+        svc.submit([Put("a", ks, ks + 9)])
+    svc.drain()
+    assert svc.store.scheduler.carried_debt == 0
+    rec = recover(cfg, svc.store.wal.clone(), svc.store.manifest.clone())
+    assert sharded_fingerprint(rec) == sharded_fingerprint(svc.store)
+    assert exact_counters(rec) == exact_counters(svc.store)
+
+
+# --------------------------- pacer unit behavior -------------------------------
+def test_pacer_releases_slices_proportional_to_write_rate():
+    store = build(small_config(), shards=1)
+    pacer = MaintenancePacer(store.scheduler, segment_budget=2,
+                             interval_bytes=10 * KB)
+    seg0 = store.scheduler.segments
+    pacer.on_submit(0)                   # no writes, no debt: no slice
+    assert pacer.slices == 0
+    # every pass still ran the mandatory segments + wal (4 records)
+    assert store.scheduler.segments == seg0 + 4
+    pacer.on_submit(25 * KB)             # 2 intervals banked -> one slice
+    assert pacer.slices == 1             # (budget 2*2 in ONE merge segment)
+    assert pacer._pending == 0           # debt drained: burst fully paid
+    pacer.on_submit(6 * KB)              # below the interval, no debt
+    assert pacer.slices == 1
+    pacer.on_submit(6 * KB)              # tops the interval up -> slice
+    assert pacer.slices == 2
+
+
+def test_pacer_drains_leftover_debt_without_new_writes():
+    """Flush-induced debt with an idle write rate still converges: each
+    idle pass releases one slice while carried debt remains."""
+    store = build(small_config(), shards=1)
+    rng = np.random.default_rng(2)
+    for _ in range(30):
+        t = TREES[int(rng.integers(0, 2))]
+        ks = rng.integers(0, KEY_SPACE, 300)
+        store.write_batch(t, ks, ks + 1, tick=False)
+        for name in ("upkeep", "mem", "log"):
+            store.scheduler.run_segment(name)
+    # make carried_debt visible to the pacer without draining it
+    store.scheduler.run_segment("merge", merge_budget=1)
+    assert store.scheduler.carried_debt > 0
+    pacer = MaintenancePacer(store.scheduler, segment_budget=4,
+                             interval_bytes=1 * MB)
+    passes = 0
+    while store.scheduler.carried_debt > 0:
+        pacer.on_submit(0)               # idle: no bytes observed
+        passes += 1
+        assert passes < 1000
+    assert pacer.slices == passes        # one slice per idle pass
+
+
+def test_pacer_defers_slices_past_flush_passes():
+    """Flush-averse pacing: a pass whose mandatory segments flushed banks
+    its slice (the stall already happened -- don't stack discretionary
+    work on it); the next flush-free pass releases the banked budget.
+    Once carried debt exceeds the ``MAX_DEFER_DEBT_SLICES`` override,
+    slices release even on flush passes (backlog beats shaping)."""
+    store = build(small_config(), shards=1)
+    pacer = MaintenancePacer(store.scheduler, segment_budget=2,
+                             interval_bytes=8 * KB)
+    rng = np.random.default_rng(5)
+
+    def overfill():
+        guard = 0
+        while store.write_memory_used() <= \
+                store.cfg.mem_flush_threshold * store.write_memory_bytes:
+            ks = rng.integers(0, KEY_SPACE, 300)
+            store.write_batch("a", ks, ks + 1, tick=False)
+            guard += 1
+            assert guard < 1000
+
+    overfill()
+    rep = pacer.on_submit(64 * KB)       # interval banked, but it flushed
+    assert rep.flushes > 0
+    assert pacer.slices == 0 and pacer.deferrals == 1
+    assert pacer._pending == 64 * KB     # banked, not consumed
+    rep2 = pacer.on_submit(0)            # flush-free pass: catch-up slice
+    assert rep2.flushes == 0
+    assert pacer.slices == 1
+
+    # pile carried debt past the override without serving it, then force
+    # another flush pass: the slice must release anyway
+    guard = 0
+    while store.scheduler.carried_debt <= \
+            MAX_DEFER_DEBT_SLICES * pacer.segment_budget:
+        ks = rng.integers(0, KEY_SPACE, 300)
+        store.write_batch(TREES[guard % 2], ks, ks + 1, tick=False)
+        for name in ("upkeep", "mem", "log"):
+            store.scheduler.run_segment(name)
+        store.scheduler.run_segment("merge", merge_budget=1)
+        guard += 1
+        assert guard < 1000
+    overfill()
+    before = pacer.slices
+    rep3 = pacer.on_submit(64 * KB)
+    assert rep3.flushes > 0
+    assert pacer.slices == before + 1    # released despite the flush
+
+
+def test_pacer_rejects_bad_knobs():
+    store = build(small_config(), shards=1)
+    with pytest.raises(ValueError, match="segment_budget"):
+        MaintenancePacer(store.scheduler, segment_budget=0,
+                         interval_bytes=1024)
+    with pytest.raises(ValueError, match="interval_bytes"):
+        MaintenancePacer(store.scheduler, segment_budget=1,
+                         interval_bytes=0)
+
+
+def test_bare_store_segments_match_sharded_one_shard():
+    """``MaintenanceScheduler.run_segment`` (bare store) and the global
+    ``ShardedMaintenanceScheduler``'s (one shard) are bit-identical --
+    the PR-4 single-shard equivalence extended to segment granularity."""
+    from repro.core.lsm.storage import LSMStore
+    cfg = small_config()
+    events = gen_schedule(seed=9, n_events=24)
+
+    reset_sst_ids()
+    bare = LSMStore(cfg)
+    for t in TREES:
+        bare.create_tree(t)
+    oracle = {t: {} for t in TREES}
+    for ev in events:
+        apply_event(bare, ev, oracle)
+
+    sharded, _ = run_schedule(cfg, events, shards=1)
+    assert fingerprint(bare) == fingerprint(sharded.shards[0].store)
+    assert vars(bare.disk.stats) == vars(sharded.disk.stats)
+    assert bare.scheduler.carried_debt == sharded.scheduler.carried_debt

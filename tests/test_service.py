@@ -299,6 +299,10 @@ def test_query_pin_many_collapses_duplicate_runs():
     (dict(entry_bytes=0), "entry_bytes"),
     (dict(entry_bytes=-1), "entry_bytes"),
     (dict(merge_budget=-1), "merge_budget"),
+    (dict(pacer_interval_bytes=0), "pacer_interval_bytes"),
+    (dict(pacer_interval_bytes=-4096), "pacer_interval_bytes"),
+    (dict(pacer_segment_budget=0), "pacer_segment_budget"),
+    (dict(pacer_segment_budget=-3), "pacer_segment_budget"),
     (dict(write_memory_bytes=40 * MB), "exceed"),
 ])
 def test_store_config_validate_raises_value_error(kw, msg):
@@ -308,3 +312,13 @@ def test_store_config_validate_raises_value_error(kw, msg):
 
 def test_store_config_validate_accepts_zero_merge_budget():
     assert small_config(merge_budget=0).validate().merge_budget == 0
+
+
+def test_store_config_validate_accepts_pacing_knobs():
+    cfg = small_config(pacer_interval_bytes=32 * KB,
+                       pacer_segment_budget=2).validate()
+    assert cfg.pacer_interval_bytes == 32 * KB
+    assert cfg.pacer_segment_budget == 2
+    # pacing off (the default) is valid regardless of the budget knob
+    assert small_config(pacer_interval_bytes=None).validate() \
+        .pacer_interval_bytes is None
