@@ -19,6 +19,22 @@ from repro.core.shard import ShardedStore, ShardRouter
 
 KB, MB = 1 << 10, 1 << 20
 
+# Run-level seed offset (``run.py --seed N``): every driver combines it
+# with its own fixed per-scenario seed, so seed 0 (the default) keeps
+# historical rows reproducible while any other value re-rolls the whole
+# suite coherently.
+_RUN_SEED = 0
+
+
+def set_run_seed(n: int) -> None:
+    global _RUN_SEED
+    _RUN_SEED = int(n)
+
+
+def run_seed() -> int:
+    return _RUN_SEED
+
+
 BASE = dict(
     total_memory_bytes=64 * MB,
     write_memory_bytes=4 * MB,
@@ -96,7 +112,7 @@ class Workload:
         self.trees = list(trees)
         self.key_max = key_max
         self.scan_len = scan_len
-        self.rng = np.random.default_rng(seed)
+        self.rng = np.random.default_rng(seed + _RUN_SEED)
         self.tree_probs = tree_probs
 
     def _keys(self, n):

@@ -14,9 +14,20 @@ Rows: ``recovery/write_mem_<MB>MB`` (value = replay seconds) with
 ``log_tail_bytes`` / ``replay_time`` / ``replayed_records`` /
 ``replayed_keys`` in the derived fields, plus one
 ``recovery/checkpoint_interval`` row showing the knob bounding the tail.
+
+Also here (physical storage plane): the fsync-policy matrix
+``recovery/fsync_<policy>`` -- the same zipf workload on the *files*
+medium under ``per_record`` / ``per_batch`` / ``group`` commit, reporting
+``fsyncs_per_kop`` (the row value; WAL fsyncs only, page-store writes
+excluded) and the commit-latency tail (``commit_p50_us`` /
+``commit_p99_us`` from the WAL's group-commit histogram). Group commit
+amortizes one fsync over many queued commits, so its ``fsyncs_per_kop``
+must sit far (>=10x) below ``per_record``'s.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -30,10 +41,11 @@ from .common import BASE, KB, MB, fmt_row
 
 
 def _drive(cfg: StoreConfig, n_ops: int, shards: int) -> ShardedStore:
+    from .common import run_seed
     reset_sst_ids()
     store = ShardedStore(cfg, shards=shards)
     store.create_tree("kv")
-    rng = np.random.default_rng(7)
+    rng = np.random.default_rng(7 + run_seed())
     batch = 256
     for _ in range(n_ops // batch):
         u = rng.random(batch)
@@ -41,6 +53,45 @@ def _drive(cfg: StoreConfig, n_ops: int, shards: int) -> ShardedStore:
         keys = (rank * 2654435761) % 200_000
         store.write_batch("kv", keys, keys + 1)
     return store
+
+
+def _fsync_matrix(n_ops: int, shards: int) -> list:
+    """files-medium commit-durability matrix: one row per fsync policy."""
+    rows = []
+    per_kop = {}
+    for policy in ("per_record", "per_batch", "group"):
+        root = tempfile.mkdtemp(prefix=f"bench-fsync-{policy}-")
+        try:
+            cfg = StoreConfig(**{
+                **BASE, "max_log_bytes": 8 * MB,
+                "storage_medium": "files", "storage_dir": root,
+                "fsync_policy": policy,
+                # a big interval + patient deadline so the group leader
+                # batches many commits behind each fsync
+                "group_commit_bytes": 1 * MB,
+                "group_commit_max_wait_s": 0.25})
+            store = _drive(cfg, n_ops, shards)
+            store.wal.sync()
+            wal = store.arena.wal
+            fsyncs = wal.fsyncs            # WAL only: the commit cost
+            kops = max(n_ops / 1000.0, 1e-9)
+            per_kop[policy] = fsyncs / kops
+            h = wal.commit_hist
+            rows.append(fmt_row(
+                f"recovery/fsync_{policy}", per_kop[policy],
+                f"scheme={cfg.scheme};shards={shards};medium=files;"
+                f"fsync_policy={policy};ops={n_ops};wal_fsyncs={fsyncs};"
+                f"fsyncs_per_kop={per_kop[policy]:.6g};"
+                f"commit_p50_us={h.quantile(0.5):.6g};"
+                f"commit_p99_us={h.quantile(0.99):.6g};"
+                f"wal_segments={wal.segment_count}"))
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    assert per_kop["group"] * 10 <= per_kop["per_record"], (
+        f"group commit must amortize >=10x fewer fsyncs than per_record "
+        f"(got {per_kop['group']:.3g} vs {per_kop['per_record']:.3g} "
+        f"per kop)")
+    return rows
 
 
 def _crash_recover(cfg: StoreConfig, store: ShardedStore) -> dict:
@@ -95,6 +146,7 @@ def run(full: bool = False, smoke: bool = False):
         f"replay_time={r['replay_time']:.6g};"
         f"replayed_records={r['replayed_records']};"
         f"replayed_keys={r['replayed_keys']}"))
+    rows.extend(_fsync_matrix(n_ops, shards))
     return rows
 
 

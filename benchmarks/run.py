@@ -13,13 +13,33 @@ write path and the maintenance scheduler.
 ``--json`` additionally writes ``BENCH_<module>.json`` next to the cwd:
 one structured record per measured row ({name, value, scheme?, shards?,
 throughput?, stalls?, derived{...}}), so the performance trajectory of the
-repo is recorded run-over-run (CI uploads these as artifacts).
+repo is recorded run-over-run (CI uploads these as artifacts). Every
+record carries run metadata -- ``seed`` (``--seed N``, default 0, offsets
+every driver's rng coherently), ``git_sha``, ``backend`` (the resolved
+``REPRO_LSM_BACKEND``) and ``medium`` (the storage medium the row ran
+on) -- so rows from different machines/checkouts stay attributable.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 import time
+
+
+def run_metadata(seed: int) -> dict:
+    """Provenance stamped onto every JSON row."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    return {"seed": seed, "git_sha": sha,
+            "backend": os.environ.get("REPRO_LSM_BACKEND", "numpy")}
 
 
 def parse_row(row: str) -> dict:
@@ -59,6 +79,12 @@ def main() -> None:
     full = "--full" in sys.argv
     smoke = "--smoke" in sys.argv
     json_out = "--json" in sys.argv
+    seed = 0
+    if "--seed" in sys.argv:
+        seed = int(sys.argv[sys.argv.index("--seed") + 1])
+        from .common import set_run_seed
+        set_run_seed(seed)
+    meta = run_metadata(seed)
     if smoke:
         modules = [fig07_single_tree, fig14_tpcc, fig15_tuner_ycsb,
                    kv_serving, recovery]
@@ -83,6 +109,10 @@ def main() -> None:
             for rec in records:
                 rec["preset"] = ("smoke" if smoke
                                  else "full" if full else "default")
+                rec.update(meta)
+                # rows name their medium when they ran on files; the
+                # default engine configuration is the in-memory medium
+                rec["medium"] = rec["derived"].get("medium", "memory")
             path = f"BENCH_{short}.json"
             with open(path, "w") as f:
                 json.dump(records, f, indent=1)

@@ -167,7 +167,15 @@ def capture_checkpoint(arena, scheduler) -> Checkpoint:
 
 
 def take_checkpoint(arena, scheduler) -> Checkpoint:
-    """Capture and install a checkpoint in the arena's manifest."""
+    """Capture and install a checkpoint in the arena's manifest.
+
+    The WAL is synced first: the checkpoint anchors its replay tail to
+    ``wal_seq``/``watermark``, so every record it references must be
+    durable before the (fsynced) checkpoint frame can point at it --
+    otherwise a crash in between leaves a durable checkpoint whose
+    anchor records died in the group-commit buffer. No-op on the
+    in-memory medium."""
+    arena.wal.sync()
     ck = capture_checkpoint(arena, scheduler)
     arena.manifest.add_checkpoint(ck)
     return ck
@@ -241,6 +249,10 @@ def _restore_tree(tree, image: dict, payloads: dict, shard: int,
         live_out[sst.sst_id] = LiveSSTable(
             shard, tree.name, p.keys, p.vals, p.lsn_min, p.lsn_max,
             p.entry_bytes, p.page_bytes, p.kind)
+        # Files medium: the restored table gets a fresh sst_id, so its
+        # pages must exist under that id for reads to have a file to hit
+        # (counters untouched -- the original write was already accounted).
+        tree.disk.ensure_sst(sst)
         return sst
 
     _restore_mem(tree.mem, image["mem"])

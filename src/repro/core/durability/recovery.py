@@ -129,4 +129,12 @@ def recover(cfg, wal, manifest, *, router=None):
         "replayed_bytes": replayed_bytes,
         "from_checkpoint": ck is not None,
     }
+    # Files medium: replayed flushes re-wrote their tables under fresh
+    # sst_ids, so the crashed run's files are orphans now -- reconcile
+    # the page directory against the converged live set (checkpoint-
+    # pinned files are spared inside gc).
+    page_store = getattr(store.arena.disk, "page_store", None)
+    if page_store is not None:
+        store.recovery_info["gc_ssts"] = len(page_store.gc(manifest.live))
+        wal.sync()                # recovery effects are durable on return
     return store

@@ -286,6 +286,33 @@ class WriteAheadLog:
     def replaying(self) -> bool:
         return self._replay is not None
 
+    # -- durability hooks -------------------------------------------------------
+    # The in-memory medium is "durable" the instant it appends (clone()
+    # models stable storage), so these are no-ops here; the file-backed
+    # ``storage_io.FileWAL`` overrides them with real buffering + fsync.
+    fsyncs = 0                   # physical fsync calls issued
+    commit_hist = None           # LatencyHistogram of commit waits (files)
+
+    def commit(self, n: int = 1) -> None:
+        """A commit point: ``n`` logical ops want durability here (store
+        batch end, scheduler tick/segment end). No-op in memory."""
+
+    def sync(self) -> None:
+        """Force everything durable now. No-op in memory."""
+
+    def bind_stats(self, stats) -> None:
+        """Mirror fsync counts into an ``IOStats``. No-op in memory."""
+
+    @property
+    def durable_lsn(self) -> int:
+        """Highest LSN guaranteed to survive a process kill."""
+        return self._head
+
+    @property
+    def all_durable(self) -> bool:
+        """True when no appended record is still waiting for its fsync."""
+        return True
+
     # -- appends ---------------------------------------------------------------
     def _push(self, rec: Record) -> None:
         self._records.append(_Stored(self.next_seq, rec.lsn0, rec.lsn_end,

@@ -190,6 +190,9 @@ class SegmentedScheduler:
         else:                                     # "wal"
             enforce_wal(arena, self)
         rep.carried_debt = self.carried_debt
+        # Commit point: the segment's TickRecord (and any still-pending
+        # writes) reach stable storage under the configured fsync policy.
+        arena.wal.commit()
         return rep
 
     def tick(self, *, merge_budget=_UNSET) -> TickReport:
@@ -209,6 +212,7 @@ class SegmentedScheduler:
         rep.merge_steps = self._run_merges(budget)
         rep.carried_debt = self.carried_debt
         enforce_wal(arena, self)
+        arena.wal.commit()        # commit point (see run_segment)
         return rep
 
 

@@ -52,10 +52,27 @@ class MemoryArena:
         self.device_pool = None
         # Durability plane: adopted (recovery) or fresh. The manifest's
         # identity guardrail rejects a config that contradicts the one the
-        # durable state was written under.
+        # durable state was written under. The StorageMedium seam lives
+        # here: "memory" builds the RAM-backed plane (default, bit-
+        # identical to every pre-files trajectory); "files" builds the
+        # physical plane under cfg.storage_dir (core/storage_io), whose
+        # wal/manifest subclass the in-memory ones -- everything above
+        # this line is medium-agnostic.
+        if wal is None and manifest is None \
+                and getattr(cfg, "storage_medium", "memory") == "files":
+            from ..storage_io import create_plane
+            wal, manifest = create_plane(cfg)
         self.wal = wal if wal is not None else WriteAheadLog()
         self.manifest = manifest if manifest is not None else Manifest()
         self.manifest.bind(cfg)
+        # Physical plumbing (no-ops on the memory medium): cache misses /
+        # flush writes reach the page store, fsync counts reach IOStats.
+        page_store = getattr(self.manifest, "pages", None)
+        if page_store is not None:
+            self.disk.page_store = page_store
+        self.wal.bind_stats(self.disk.stats)
+        if hasattr(self.manifest, "bind_stats"):
+            self.manifest.bind_stats(self.disk.stats)
         self.members: list = []             # stores drawing from this arena
 
     def register(self, store) -> int:

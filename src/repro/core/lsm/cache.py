@@ -33,6 +33,9 @@ class IOStats:
     ops: int = 0                    # logical operations observed
     write_stalls: int = 0           # write admission deferrals (service
                                     # backpressure: L0 stall / mem pressure)
+    fsyncs: int = 0                 # physical fsync calls (files medium:
+                                    # WAL commits + SSTable/manifest writes;
+                                    # always 0 on the in-memory medium)
     jit_compiles: int = 0           # backend jit shape-bucket compiles
     jit_cache_hits: int = 0         # backend jit shape-bucket cache hits
                                     # (both 0 on store paths; benchmark
@@ -156,6 +159,9 @@ class Disk:
     ghost: object = None                # tuner's GhostCache (optional)
     device_pool: object = None          # DevicePagePool (optional): HBM
                                         # residency for fused tier lookups
+    page_store: object = None           # storage_io.FilePageStore (optional):
+                                        # cache misses become real preads,
+                                        # flush/merge writes become real files
     stats: IOStats = field(default_factory=IOStats)
 
     def query_pin(self, sst_id: int, page_index: int) -> None:
@@ -164,6 +170,8 @@ class Disk:
             self.stats.pages_query_read += 1
             if self.ghost is not None:
                 self.ghost.on_disk_read((sst_id, page_index), merge=False)
+            if self.page_store is not None:
+                self.page_store.read_page(sst_id, page_index)
 
     def query_pin_many(self, sst_id: int, page_indices) -> None:
         """Batched query pins: one pin (hit-or-miss accounted) per entry.
@@ -203,6 +211,8 @@ class Disk:
             self.stats.pages_merge_read += 1
             if self.ghost is not None:
                 self.ghost.on_disk_read((sst_id, page_index), merge=True)
+            if self.page_store is not None:
+                self.page_store.read_page(sst_id, page_index)
 
     def merge_read_sst(self, sst) -> None:
         for p in range(sst.num_pages):
@@ -217,6 +227,15 @@ class Disk:
         for p in range(sst.num_pages):
             self.cache.insert((sst.sst_id, p))
         self.cache.insert((sst.sst_id, -1))  # bloom pages pinned as one unit
+        if self.page_store is not None:
+            self.page_store.write(sst)
+
+    def ensure_sst(self, sst) -> None:
+        """Make a restored table's file exist without touching counters
+        (checkpoint restore re-keys tables to fresh sst_ids; the write
+        was already accounted when the original id flushed)."""
+        if self.page_store is not None:
+            self.page_store.ensure(sst)
 
     def drop_sst(self, sst) -> None:
         pids = [(sst.sst_id, p) for p in range(-1, sst.num_pages)]
@@ -225,3 +244,5 @@ class Disk:
             self.ghost.invalidate_many(pids)
         if self.device_pool is not None:
             self.device_pool.drop_sst(sst)
+        if self.page_store is not None:
+            self.page_store.mark_dropped(sst.sst_id)

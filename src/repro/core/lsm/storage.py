@@ -33,6 +33,8 @@ _INF = 2**62
 SCHEMES = ("partitioned", "btree-dynamic", "btree-static",
            "btree-static-tuned", "accordion-index", "accordion-data")
 POLICIES = ("mem", "lsn", "opt")
+STORAGE_MEDIA = ("memory", "files")
+FSYNC_POLICIES = ("per_record", "per_batch", "group")
 
 
 @dataclass
@@ -118,6 +120,23 @@ class StoreConfig:
     # ``pacer_interval_bytes`` of ingested payload. None = pacing off.
     pacer_interval_bytes: int | None = None
     pacer_segment_budget: int = 8
+    # Physical storage plane (core/storage_io): "memory" keeps the WAL /
+    # SSTables as byte-accounted RAM buffers (every existing trajectory
+    # bit-identical); "files" backs them with real files under
+    # storage_dir -- segmented WAL, one file per SSTable, manifest frame
+    # log -- with process-kill crash safety.
+    storage_medium: str = "memory"
+    storage_dir: str | None = None
+    # Commit durability policy on the files medium: "per_record" fsyncs
+    # every WAL append, "per_batch" fsyncs at every commit point (store
+    # batch / scheduler tick), "group" batches concurrent commits until
+    # group_commit_bytes of frames are pending or the oldest commit has
+    # waited group_commit_max_wait_s (leader-follower: one fsync serves
+    # the whole queue). Ignored (no fsyncs at all) on the memory medium.
+    fsync_policy: str = "per_batch"
+    wal_segment_bytes: int = 1 << 20
+    group_commit_bytes: int = 64 << 10
+    group_commit_max_wait_s: float = 1e-3
     time_model: TimeModel = field(default_factory=TimeModel)
 
     def validate(self):
@@ -166,6 +185,32 @@ class StoreConfig:
             raise ValueError(
                 f"pacer_segment_budget must be positive (merge steps per "
                 f"paced slice), got {self.pacer_segment_budget}")
+        if self.storage_medium not in STORAGE_MEDIA:
+            raise ValueError(
+                f"unknown storage_medium {self.storage_medium!r}; "
+                f"expected one of {STORAGE_MEDIA}")
+        if self.storage_medium == "files" and not self.storage_dir:
+            raise ValueError(
+                f"storage_dir must name a directory when storage_medium="
+                f"'files', got {self.storage_dir!r}")
+        if self.fsync_policy not in FSYNC_POLICIES:
+            raise ValueError(
+                f"unknown fsync_policy {self.fsync_policy!r}; expected "
+                f"one of {FSYNC_POLICIES}")
+        if self.wal_segment_bytes <= 0:
+            raise ValueError(
+                f"wal_segment_bytes must be positive (the fixed WAL "
+                f"segment-file size), got {self.wal_segment_bytes}")
+        if self.group_commit_bytes <= 0:
+            raise ValueError(
+                f"group_commit_bytes must be positive (pending WAL bytes "
+                f"that trigger a group fsync), got "
+                f"{self.group_commit_bytes}")
+        if self.group_commit_max_wait_s <= 0:
+            raise ValueError(
+                f"group_commit_max_wait_s must be positive (max age of a "
+                f"queued commit before the group fsyncs), got "
+                f"{self.group_commit_max_wait_s}")
         if self.write_memory_bytes + self.sim_cache_bytes \
                 > self.total_memory_bytes:
             raise ValueError(
@@ -343,6 +388,10 @@ class LSMStore:
                 f"payload {TOMBSTONE} is reserved for deletes; "
                 f"use delete_batch")
         self._ingest(tree_name, keys, vals, op=op, tick=tick)
+        # Commit point: the batch is durable when this returns (under the
+        # configured fsync policy). With tick=True the scheduler already
+        # committed; this is then a no-op.
+        self.arena.wal.commit(len(keys))
 
     def write(self, tree_name: str, keys, vals=None, *, op: bool = True) -> None:
         """Legacy entry point: a write_batch counted as ONE logical op per
@@ -359,6 +408,7 @@ class LSMStore:
         self._ingest(tree_name, keys,
                      np.full(len(keys), TOMBSTONE, np.int64),
                      op=op, tick=tick, delete=True)
+        self.arena.wal.commit(len(keys))    # commit point (see write_batch)
 
     def note_ops(self, n: int = 1) -> None:
         self.disk.stats.ops += n

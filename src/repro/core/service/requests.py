@@ -78,10 +78,16 @@ Request = Put | Get | Delete | Scan
 # --------------------------------- results -----------------------------------
 @dataclass(frozen=True)
 class WriteAck:
-    """A Put/Delete request fully ingested (``n`` keys)."""
+    """A Put/Delete request fully ingested (``n`` keys). ``durable``
+    reports whether the WAL records covering this submit had reached
+    stable storage when the ack was built: always True on the in-memory
+    medium and under per_record/per_batch fsync policies; under group
+    commit an ack may return before its group's fsync (the deferred-
+    durability window group commit trades for fewer fsyncs)."""
 
     tree: str
     n: int
+    durable: bool = True
 
 
 @dataclass(frozen=True, eq=False)

@@ -251,6 +251,11 @@ class StorageService:
             done += 1
         return done
 
+    def sync(self) -> None:
+        """Make every previously acked write durable now (drains a
+        pending group-commit window; no-op on the memory medium)."""
+        self.store.wal.sync()
+
     # -- execution ------------------------------------------------------------
     def _execute_step(self, step: PlanStep, results: list,
                       count_ops: bool) -> None:
@@ -336,18 +341,6 @@ class StorageService:
             self._execute_step(step, results, count_ops)
             if session is not None:
                 session.stats.executed_keys += step.n_keys
-        for i, r in w_req.items():
-            d = w_defer.get(i)
-            if d is None:
-                results[i] = WriteAck(r.tree, len(r.keys))
-                continue
-            sels, reason = d
-            if any(s is None for s in sels) \
-                    or sum(len(s) for s in sels) == len(r.keys):
-                results[i] = Deferred(r, reason)
-            else:
-                sel = np.sort(np.concatenate(sels))
-                results[i] = Deferred(self._narrow(r, sel), reason)
         if session is not None:
             session.stats.submitted_keys += sum(s.n_keys for s in plan.steps)
         if wrote:
@@ -357,6 +350,22 @@ class StorageService:
             else:
                 self.store.scheduler.tick()
             self.stall.record((time.perf_counter() - tm) * 1e6)
+        # Acks are built AFTER maintenance so their durability flag sees
+        # the tick-end commit point: under group commit the records may
+        # still be waiting for their group's fsync, and the ack says so.
+        durable = self.store.wal.all_durable
+        for i, r in w_req.items():
+            d = w_defer.get(i)
+            if d is None:
+                results[i] = WriteAck(r.tree, len(r.keys), durable=durable)
+                continue
+            sels, reason = d
+            if any(s is None for s in sels) \
+                    or sum(len(s) for s in sels) == len(r.keys):
+                results[i] = Deferred(r, reason)
+            else:
+                sel = np.sort(np.concatenate(sels))
+                results[i] = Deferred(self._narrow(r, sel), reason)
         mem_plan = self.governor.observe(self)
         if mem_plan is not None:
             self._apply_plan(mem_plan)
@@ -384,7 +393,8 @@ class StorageService:
             # that had not executed; once it completes, the ack must cover
             # the caller's ORIGINAL request, not just the remainder.
             if isinstance(out, WriteAck) and out.n != len(requests[i].keys):
-                out = WriteAck(out.tree, len(requests[i].keys))
+                out = WriteAck(out.tree, len(requests[i].keys),
+                               durable=out.durable)
             results[i] = out
             return not isinstance(out, Deferred)
 

@@ -1,0 +1,50 @@
+"""Subprocess side of the process-kill crash matrix.
+
+Runs the shared deterministic workload (``kill_workload.drive``) against a
+*files*-medium store rooted at ``--root`` and SIGKILLs its own process --
+no atexit, no flush, no Python teardown -- the instant boundary
+``--kill-at`` completes. The parent (``test_crash_kill.py``) then reopens
+the storage plane from the surviving files and asserts bit-identical
+recovery against a memory-medium oracle.
+
+``--kill-at -1`` runs to completion, fsyncs, and exits 0 (clean-shutdown
+control case).
+"""
+import argparse
+import os
+import signal
+import sys
+
+from kill_workload import drive, kill_config
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", required=True)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--kill-at", type=int, required=True)
+    ap.add_argument("--policy", default="per_batch")
+    ap.add_argument("--mode", default="full")
+    args = ap.parse_args()
+
+    from repro.core.lsm.sstable import reset_sst_ids
+    from repro.core.shard.sharded import ShardedStore
+
+    reset_sst_ids()
+    cfg = kill_config(args.shards, medium="files", root=args.root,
+                      fsync_policy=args.policy, mode=args.mode)
+    store = ShardedStore(cfg, shards=args.shards)
+
+    def on_boundary(i):
+        if i == args.kill_at:
+            # hard kill: bypasses buffered file objects, atexit hooks and
+            # interpreter shutdown -- only fsynced bytes survive
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    drive(store, on_boundary, mode=args.mode)
+    store.wal.sync()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""Shared deterministic workload for the process-kill crash harness.
+
+Both sides of the kill matrix import this module: ``crash_child.py`` runs
+``drive()`` against a *files*-medium store and SIGKILLs itself at a chosen
+boundary; ``test_crash_kill.py`` runs the identical ``drive()`` against a
+*memory*-medium oracle and records a fingerprint at every boundary. The
+workload is a pure function of the config (fixed rng seed, no wall-clock
+coupling), so boundary ``k`` means the same store state in both runs.
+
+Boundaries are placed after every batch submit AND after every paced
+maintenance segment, so the kill matrix covers WAL-segment rollovers,
+log-triggered flushes, checkpoint writes, and physical WAL truncation
+(segment unlinks) -- the moments where a torn write could diverge state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.lsm.storage import StoreConfig
+
+KB = 1024
+
+# ordered maintenance segments of the paced scheduler
+SEGMENTS = ("upkeep", "mem", "log", "merge", "wal")
+
+TREES = ("alpha", "beta")
+N_BATCHES = 4
+BATCH = 256                       # keys per batch => 64 KB of LSN each
+
+# one boundary after each batch, then one after each segment of the
+# batch's maintenance pass
+N_BOUNDARIES = N_BATCHES * (1 + len(SEGMENTS))
+
+
+def kill_config(shards: int, *, medium: str, root=None,
+                fsync_policy: str = "per_batch",
+                mode: str = "full") -> StoreConfig:
+    """Config small enough that the drive() workload crosses every
+    interesting durability edge: 8 KB WAL segments (many rollovers),
+    512 KB log cap (truncation + min-LSN flushes), 256 KB checkpoint
+    interval (multiple checkpoints)."""
+    seg = 64 * KB if mode == "group" else 8 * KB
+    return StoreConfig(
+        total_memory_bytes=8192 * KB, write_memory_bytes=256 * KB,
+        sim_cache_bytes=64 * KB, page_bytes=4 * KB, entry_bytes=256,
+        active_sstable_bytes=32 * KB, sstable_bytes=64 * KB,
+        max_log_bytes=512 * KB, checkpoint_interval_bytes=256 * KB,
+        scheme="partitioned", flush_policy="lsn",
+        storage_medium=medium, storage_dir=root,
+        fsync_policy=fsync_policy, wal_segment_bytes=seg,
+        # group mode: a large byte threshold + effectively-infinite wait
+        # keeps whole commit groups buffered across kill points
+        group_commit_bytes=12 * KB, group_commit_max_wait_s=3600.0)
+
+
+def drive(store, on_boundary=None, *, mode: str = "full"):
+    """Run the deterministic mixed workload.
+
+    ``on_boundary(i)`` fires after boundary ``i`` completes (0-based).
+    ``mode="group"`` drives writes only (no maintenance segments) so the
+    userspace group-commit buffer stays the lone durability variable.
+    """
+    rng = np.random.default_rng(1234)
+    boundary = 0
+    for t in TREES:
+        store.create_tree(t)
+
+    def hit():
+        nonlocal boundary
+        if on_boundary is not None:
+            on_boundary(boundary)
+        boundary += 1
+
+    if mode == "group":
+        store.create_tree("gamma")
+        for i in range(10):
+            keys = rng.integers(0, 4096, size=BATCH)
+            store.write_batch("gamma", keys, keys * 3 + i, tick=False)
+            hit()
+        return boundary
+
+    for i in range(N_BATCHES):
+        for t in TREES:
+            keys = rng.integers(0, 4096, size=BATCH)
+            if i % 3 == 2 and t == "beta":
+                store.delete_batch(t, keys, tick=False)
+            else:
+                store.write_batch(t, keys, keys * 7 + i, tick=False)
+        hit()
+        for seg in SEGMENTS:
+            store.scheduler.run_segment(seg)
+            hit()
+    return boundary

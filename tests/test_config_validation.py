@@ -1,0 +1,93 @@
+"""``StoreConfig.validate`` error-message contract.
+
+Every rejection must *render* the offending field name AND the offending
+value -- a config error message you cannot act on is a bug. The cases
+here assert on the actual rendered text, not just the exception type, so
+a refactor that drops the value from the message fails loudly.
+"""
+import pytest
+
+from repro.core.lsm.storage import StoreConfig
+
+KB, MB = 1024, 1024 * 1024
+
+
+def base(**kw):
+    d = dict(total_memory_bytes=32 * MB, write_memory_bytes=1 * MB,
+             sim_cache_bytes=1 * MB, page_bytes=4 * KB, entry_bytes=256,
+             active_sstable_bytes=64 * KB, sstable_bytes=128 * KB)
+    d.update(kw)
+    return StoreConfig(**d)
+
+
+# (overrides, fragments that must all appear in the rendered message)
+CASES = [
+    (dict(scheme="lsm2000"),
+     ["scheme", "'lsm2000'", "partitioned"]),
+    (dict(flush_policy="yolo"),
+     ["flush_policy", "'yolo'"]),
+    (dict(backend="quantum"),
+     ["backend", "'quantum'", "registered backends"]),
+    (dict(entry_bytes=0),
+     ["entry_bytes", "got 0"]),
+    (dict(entry_bytes=-8),
+     ["entry_bytes", "got -8"]),
+    (dict(device_pool_bytes=-1),
+     ["device_pool_bytes", "got -1"]),
+    (dict(merge_budget=-3),
+     ["merge_budget", "got -3"]),
+    (dict(max_log_bytes=0),
+     ["max_log_bytes", "got 0"]),
+    (dict(checkpoint_interval_bytes=0),
+     ["checkpoint_interval_bytes", "got 0"]),
+    (dict(pacer_interval_bytes=-2),
+     ["pacer_interval_bytes", "got -2"]),
+    (dict(pacer_segment_budget=0),
+     ["pacer_segment_budget", "got 0"]),
+    # -- physical storage plane --------------------------------------------
+    (dict(storage_medium="tape"),
+     ["storage_medium", "'tape'", "memory", "files"]),
+    (dict(storage_medium="files", storage_dir=None),
+     ["storage_dir", "storage_medium='files'", "None"]),
+    (dict(storage_medium="files", storage_dir=""),
+     ["storage_dir", "''"]),
+    (dict(fsync_policy="eventually"),
+     ["fsync_policy", "'eventually'", "per_record", "per_batch", "group"]),
+    (dict(wal_segment_bytes=0),
+     ["wal_segment_bytes", "got 0"]),
+    (dict(wal_segment_bytes=-4096),
+     ["wal_segment_bytes", "got -4096"]),
+    (dict(group_commit_bytes=0),
+     ["group_commit_bytes", "got 0"]),
+    (dict(group_commit_max_wait_s=0),
+     ["group_commit_max_wait_s", "got 0"]),
+    (dict(group_commit_max_wait_s=-0.5),
+     ["group_commit_max_wait_s", "got -0.5"]),
+    # ----------------------------------------------------------------------
+    (dict(write_memory_bytes=20 * MB, sim_cache_bytes=20 * MB),
+     ["write_memory_bytes", "sim_cache_bytes", "total_memory_bytes",
+      str(20 * MB), str(32 * MB)]),
+]
+
+
+@pytest.mark.parametrize("overrides,fragments", CASES,
+                         ids=[next(iter(c[0])) + "=" +
+                              repr(c[0][next(iter(c[0]))])
+                              for c in CASES])
+def test_validate_message_names_field_and_value(overrides, fragments):
+    with pytest.raises(ValueError) as ei:
+        base(**overrides).validate()
+    msg = str(ei.value)
+    for frag in fragments:
+        assert frag in msg, f"message {msg!r} missing {frag!r}"
+
+
+def test_valid_configs_pass(tmp_path):
+    assert base().validate() is not None
+    # files medium with a directory is legal, as are all fsync policies
+    for policy in ("per_record", "per_batch", "group"):
+        base(storage_medium="files", storage_dir=str(tmp_path),
+             fsync_policy=policy).validate()
+    # None sentinels mean "feature off", not "invalid"
+    base(checkpoint_interval_bytes=None, pacer_interval_bytes=None,
+         merge_budget=None).validate()

@@ -1,0 +1,185 @@
+"""Process-kill crash matrix over the file-backed storage plane.
+
+The real-crash analogue of the clone-based matrix in ``test_recovery``:
+a *subprocess* runs the deterministic ``kill_workload.drive`` workload on
+a files-medium store and SIGKILLs itself at a chosen boundary -- no
+flushes, no teardown; only fsynced bytes survive. The parent reopens the
+plane from the surviving files and asserts the recovered store is
+bit-identical (fingerprint + ``RECOVERY_EXACT_COUNTERS`` + ``log_pos``)
+to a memory-medium oracle run at that same boundary.
+
+Default: a spread of kill points x shards {1, 4}. Set
+``DURABILITY_KILL_MATRIX=full`` (the CI durability-files job does) to run
+every batch and maintenance-segment boundary -- every WAL-segment
+rollover, log-triggered flush, checkpoint write and physical truncation
+the workload crosses.
+
+Also here: the torn-tail case (garbage + truncated frames appended to the
+last surviving segment must be ignored) and the group-commit kill case
+(recovery lands on the last *fsynced* group boundary, within the
+configured group window of the kill point).
+"""
+import os
+import signal
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.durability import recover
+from repro.core.durability.checkpoint import RECOVERY_EXACT_COUNTERS
+from repro.core.lsm.sstable import reset_sst_ids
+from repro.core.shard.sharded import ShardedStore
+from repro.core.storage_io import open_plane, plane_paths
+from repro.core.storage_io.format import build_frame
+
+from kill_workload import N_BOUNDARIES, drive, kill_config
+from test_differential import fingerprint
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+SRC_DIR = os.path.join(os.path.dirname(TESTS_DIR), "src")
+
+FULL = os.environ.get("DURABILITY_KILL_MATRIX") == "full"
+KILL_POINTS = list(range(N_BOUNDARIES)) if FULL else [0, 5, 11, 17, 23]
+
+
+def snapshot(store):
+    """Value-snapshot of everything the recovery contract promises."""
+    return {
+        "fp": [fingerprint(sh.store) for sh in store.shards],
+        "counters": [{k: getattr(sh.store.disk.stats, k)
+                      for k in RECOVERY_EXACT_COUNTERS}
+                     for sh in store.shards],
+        "log_pos": store.log_pos,
+    }
+
+
+_ORACLES: dict = {}
+
+
+def oracle_run(shards: int, mode: str = "full"):
+    """Memory-medium reference run; snapshots at every boundary."""
+    key = (shards, mode)
+    if key not in _ORACLES:
+        reset_sst_ids()
+        store = ShardedStore(kill_config(shards, medium="memory",
+                                         mode=mode), shards=shards)
+        snaps = []
+        drive(store, lambda i: snaps.append(snapshot(store)), mode=mode)
+        snaps.append(snapshot(store))          # post-run (clean shutdown)
+        _ORACLES[key] = snaps
+    return _ORACLES[key]
+
+
+def run_child(root, *, shards, kill_at, policy="per_batch", mode="full"):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + TESTS_DIR
+    proc = subprocess.run(
+        [sys.executable, os.path.join(TESTS_DIR, "crash_child.py"),
+         "--root", str(root), "--shards", str(shards),
+         "--kill-at", str(kill_at), "--policy", policy, "--mode", mode],
+        env=env, capture_output=True, text=True, timeout=300)
+    if kill_at < 0:
+        assert proc.returncode == 0, proc.stderr
+    else:
+        assert proc.returncode == -signal.SIGKILL, (
+            f"child should die by SIGKILL, got rc={proc.returncode}\n"
+            f"{proc.stderr}")
+    return proc
+
+
+def recover_from(root, *, shards, policy="per_batch", mode="full"):
+    reset_sst_ids()
+    cfg = kill_config(shards, medium="files", root=str(root),
+                      fsync_policy=policy, mode=mode)
+    wal, manifest = open_plane(cfg)
+    return recover(cfg, wal, manifest)
+
+
+# ------------------------------ kill matrix -----------------------------------
+@pytest.mark.parametrize("shards", [1, 4])
+@pytest.mark.parametrize("kill_at", KILL_POINTS)
+def test_sigkill_recovers_bit_identical(tmp_path, shards, kill_at):
+    run_child(tmp_path, shards=shards, kill_at=kill_at)
+    rec = recover_from(tmp_path, shards=shards)
+    # per_batch: every boundary is an fsync edge, so the recovered store
+    # must land exactly on the oracle state at the kill boundary
+    assert snapshot(rec) == oracle_run(shards)[kill_at]
+
+
+def test_clean_shutdown_reopens_final_state(tmp_path):
+    run_child(tmp_path, shards=4, kill_at=-1)
+    rec = recover_from(tmp_path, shards=4)
+    assert snapshot(rec) == oracle_run(4)[-1]
+    # the workload must actually have exercised the physical edges the
+    # matrix claims to cover: segment rollovers and truncation unlinks
+    wal = rec.arena.wal
+    assert wal.truncated_to > 0, "log truncation never fired"
+    names = sorted(p.name for p in (tmp_path / "wal").iterdir()
+                   if p.name.startswith("seg-"))
+    assert names and names[0] != "seg-0000000000.wal", \
+        "no sealed segment was ever unlinked"
+
+
+def test_recovered_store_keeps_working(tmp_path):
+    """A post-kill store is a full citizen: it serves reads and survives a
+    second open."""
+    run_child(tmp_path, shards=1, kill_at=KILL_POINTS[-1])
+    rec = recover_from(tmp_path, shards=1)
+    import numpy as np
+    keys = np.arange(100, 140)
+    rec.write_batch("alpha", keys, keys * 11)
+    found, vals = rec.read_batch("alpha", keys)
+    assert found.all() and (vals == keys * 11).all()
+    post = snapshot(rec)
+    rec.wal.sync()
+    rec2 = recover_from(tmp_path, shards=1)
+    assert snapshot(rec2) == post
+
+
+# -------------------------------- torn tail -----------------------------------
+def _last_segment(root):
+    wal_dir = plane_paths(str(root))["wal"]
+    segs = sorted(n for n in os.listdir(wal_dir)
+                  if n.startswith("seg-") and n.endswith(".wal"))
+    return os.path.join(wal_dir, segs[-1])
+
+
+@pytest.mark.parametrize("junk", [
+    b"\x00" * 37,                                  # zero tail (lost write)
+    build_frame(10**6, b"x" * 64)[:-11],           # torn frame (cut short)
+    b"\xde\xad\xbe\xef" + b"junk" * 8,             # garbage bytes
+], ids=["zeros", "torn-frame", "garbage"])
+def test_torn_tail_ignored(tmp_path, junk):
+    run_child(tmp_path, shards=1, kill_at=-1)
+    with open(_last_segment(tmp_path), "ab") as f:
+        f.write(junk)
+    rec = recover_from(tmp_path, shards=1)
+    assert snapshot(rec) == oracle_run(1)[-1]
+
+
+# ------------------------------ group commit ----------------------------------
+@pytest.mark.parametrize("kill_at", [2, 5, 9])
+def test_group_commit_kill_lands_on_group_boundary(tmp_path, kill_at):
+    """Under group commit an un-fsynced tail of <= one group may be lost:
+    recovery lands on the most recent *fsynced* boundary j <= kill point,
+    within the group window, and is bit-identical to the oracle there."""
+    run_child(tmp_path, shards=1, kill_at=kill_at, policy="group",
+              mode="group")
+    rec = recover_from(tmp_path, shards=1, policy="group", mode="group")
+    snaps = oracle_run(1, mode="group")
+    got = snapshot(rec)
+    js = [j for j in range(kill_at + 1)
+          if snaps[j]["log_pos"] == got["log_pos"]]
+    assert js, (f"recovered log_pos {got['log_pos']} matches no oracle "
+                f"boundary <= {kill_at}")
+    j = js[-1]
+    # group_commit_bytes admits ~3 batch frames before forcing an fsync
+    assert kill_at - j <= 3, f"lost more than one group: j={j}"
+    assert got == snaps[j]
+
+
+def test_group_commit_sync_makes_all_durable(tmp_path):
+    run_child(tmp_path, shards=1, kill_at=-1, policy="group", mode="group")
+    rec = recover_from(tmp_path, shards=1, policy="group", mode="group")
+    assert snapshot(rec) == oracle_run(1, mode="group")[-1]

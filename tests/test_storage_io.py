@@ -1,0 +1,390 @@
+"""Unit tests for the physical storage plane (``core.storage_io``).
+
+Covers the frame codec and its torn-tail contract, the segmented
+``FileWAL`` (rollover, reopen, truncation unlinks, fsync policies and the
+group-commit accounting), the per-SSTable ``FilePageStore`` (real page
+reads, CRC-verified loads, pin/defer/gc lifecycle), the manifest edit
+codec round-trip (hypothesis-driven when available), and the files-vs-
+memory differential: the storage medium must never change engine state,
+only make it durable.
+"""
+import os
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.lsm.sstable import reset_sst_ids
+from repro.core.lsm.storage import LSMStore, StoreConfig
+from repro.core.durability.manifest import ManifestEdit
+from repro.core.service import Put, StorageService
+from repro.core.shard.sharded import ShardedStore
+from repro.core.storage_io import (CorruptFrameError, FileManifest,
+                                   FilePageStore, FileWAL, build_frame,
+                                   decode_edit, encode_edit, open_plane,
+                                   scan_frames)
+
+from kill_workload import drive, kill_config
+from test_differential import fingerprint
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KB = 1024
+
+
+# ------------------------------ frame codec -----------------------------------
+def test_frame_roundtrip_and_tail_offsets():
+    frames = [(7, b"hello"), (0, b""), (2**40, b"x" * 1000)]
+    blob = b"".join(build_frame(t, p) for t, p in frames)
+    out, end = scan_frames(blob)
+    assert out == frames and end == len(blob)
+
+
+@pytest.mark.parametrize("junk", [
+    b"\x00" * 5,                         # partial header
+    build_frame(1, b"abc")[:-2],         # payload cut short
+    b"\xff" * 40,                        # bad magic
+], ids=["short-header", "cut-payload", "bad-magic"])
+def test_scan_stops_at_torn_tail(junk):
+    good = build_frame(3, b"keep me")
+    out, end = scan_frames(good + junk)
+    assert out == [(3, b"keep me")] and end == len(good)
+
+
+def test_scan_stops_at_crc_mismatch():
+    f = bytearray(build_frame(1, b"payload"))
+    f[-3] ^= 0xFF                        # flip a payload bit
+    out, end = scan_frames(bytes(f))
+    assert out == [] and end == 0
+
+
+# ------------------------------ FileWAL ---------------------------------------
+def _fill(wal, n=12, tree="t", entry_bytes=256, keys_per=16):
+    rng = np.random.default_rng(0)
+    wal.append_tree_create(tree, dataset=None, entry_bytes=None)
+    for _ in range(n):
+        keys = rng.integers(0, 1000, size=keys_per)
+        wal.append_batch(tree, keys, keys * 2, entry_bytes=entry_bytes,
+                         op=True)
+        wal.commit(keys_per)
+
+
+def test_filewal_create_refuses_nonempty(tmp_path):
+    (tmp_path / "stray").write_text("x")
+    with pytest.raises(FileExistsError, match="not empty"):
+        FileWAL.create(str(tmp_path))
+
+
+def test_filewal_segments_roll_and_reopen(tmp_path):
+    wal = FileWAL.create(str(tmp_path), segment_bytes=2 * KB)
+    _fill(wal, n=12)
+    assert wal.segment_count > 1, "workload must roll segments"
+    wal.close()
+    re = FileWAL.open(str(tmp_path), segment_bytes=2 * KB)
+    assert re.head_lsn == wal.head_lsn
+    assert re.next_seq == wal.next_seq
+    assert re.num_records == wal.num_records
+    assert [r.seq for r in re._records] == [r.seq for r in wal._records]
+    assert [r.buf for r in re._records] == [r.buf for r in wal._records]
+    assert re.all_durable and re.durable_lsn == re.head_lsn
+
+
+def test_filewal_truncate_unlinks_sealed_segments(tmp_path):
+    wal = FileWAL.create(str(tmp_path), segment_bytes=2 * KB)
+    _fill(wal, n=12)
+    n_before = len(os.listdir(tmp_path))
+    # drop the checkpoint-covered prefix, as enforce_wal does after a
+    # checkpoint: physical drops key off the sequence barrier
+    mid_rec = wal._records[len(wal._records) // 2]
+    mid = mid_rec.lsn0
+    wal.truncate(mid, keep_after_seq=mid_rec.seq - 1)
+    assert len(os.listdir(tmp_path)) < n_before, \
+        "truncation must unlink whole dead segments"
+    assert wal.truncated_to == mid
+    wal.close()
+    re = FileWAL.open(str(tmp_path), segment_bytes=2 * KB)
+    assert re.truncated_to == mid
+    assert re.head_lsn == wal.head_lsn and re.next_seq == wal.next_seq
+    assert [r.seq for r in re._records] == [r.seq for r in wal._records]
+
+
+def test_filewal_truncate_all_preserves_head_via_meta(tmp_path):
+    wal = FileWAL.create(str(tmp_path))
+    _fill(wal, n=4)
+    head = wal.head_lsn
+    # every record at/below the barrier: log empties physically
+    wal.truncate(head, keep_after_seq=wal.next_seq - 1)
+    assert wal.num_records == 0
+    wal.close()
+    re = FileWAL.open(str(tmp_path))
+    assert re.head_lsn == head and re.next_seq == wal.next_seq
+    assert re.num_records == len(wal._records)
+
+
+def test_filewal_torn_tail_last_segment_only(tmp_path):
+    wal = FileWAL.create(str(tmp_path), segment_bytes=2 * KB)
+    _fill(wal, n=12)
+    wal.close()
+    paths = sorted(p for p in os.listdir(tmp_path) if p.startswith("seg-"))
+    with open(tmp_path / paths[-1], "ab") as f:
+        f.write(b"\xfftorn!")
+    re = FileWAL.open(str(tmp_path), segment_bytes=2 * KB)
+    assert re.num_records == wal.num_records     # tail dropped, then healed
+    re.close()
+    with open(tmp_path / paths[0], "ab") as f:   # sealed file: corruption
+        f.write(b"\xffbad")
+    with pytest.raises(CorruptFrameError, match="interior corruption"):
+        FileWAL.open(str(tmp_path), segment_bytes=2 * KB)
+
+
+def test_fsync_policy_counts(tmp_path):
+    n = 10
+    counts = {}
+    for policy in ("per_record", "per_batch", "group"):
+        root = tmp_path / policy
+        wal = FileWAL.create(str(root), fsync_policy=policy,
+                             group_bytes=16 * KB, group_max_wait_s=3600.0)
+        _fill(wal, n=n)
+        counts[policy] = wal.fsyncs
+        if policy == "group":
+            assert not wal.all_durable           # tail still buffered
+            assert wal.durable_lsn < wal.head_lsn
+            wal.sync()
+            assert wal.all_durable and wal.durable_lsn == wal.head_lsn
+        else:
+            assert wal.all_durable
+        assert wal.commit_hist.count > 0
+        wal.close()
+    # per_record also fsyncs the tree-create record; group batches many
+    # commits behind one fsync
+    assert counts["per_record"] == n + 1
+    assert counts["per_batch"] == n
+    assert counts["group"] < counts["per_batch"] / 2
+
+
+def test_group_commit_latency_accounting(tmp_path):
+    wal = FileWAL.create(str(tmp_path), fsync_policy="group",
+                         group_bytes=1, group_max_wait_s=3600.0)
+    keys = np.arange(8)
+    wal.append_batch("t", keys, keys, entry_bytes=64, op=True)
+    wal.commit(8)                         # group_bytes=1: fsyncs instantly
+    assert wal.fsyncs == 1
+    assert wal.commit_hist.count == 8     # one histogram entry per op
+    assert wal.commit_hist.quantile(0.99) >= 0
+
+
+# ---------------------------- FilePageStore -----------------------------------
+def _sst(sst_id, n=64, entry_bytes=256, page_bytes=4 * KB):
+    keys = np.arange(n, dtype=np.int64)
+    return SimpleNamespace(sst_id=sst_id, keys=keys, vals=keys * 3,
+                           lsn_min=10, lsn_max=99, entry_bytes=entry_bytes,
+                           page_bytes=page_bytes)
+
+
+def test_page_store_write_load_roundtrip(tmp_path):
+    ps = FilePageStore(str(tmp_path))
+    sst = _sst(7)
+    ps.write(sst)
+    run = ps.load(7)
+    np.testing.assert_array_equal(run["keys"], sst.keys)
+    np.testing.assert_array_equal(run["vals"], sst.vals)
+    assert (run["lsn_min"], run["lsn_max"]) == (10, 99)
+    assert (run["entry_bytes"], run["page_bytes"]) == (256, 4 * KB)
+    assert ps.fsyncs == 1 and ps.ids() == {7}
+
+
+def test_page_store_read_page_geometry(tmp_path):
+    ps = FilePageStore(str(tmp_path))
+    ps.write(_sst(1, n=20, entry_bytes=256, page_bytes=4 * KB))
+    epp = 4 * KB // 256                   # 16 entries per page
+    assert ps.read_page(1, 0) == 2 * epp * 8          # full page
+    assert ps.read_page(1, 1) == 2 * (20 - epp) * 8   # ragged last page
+    assert ps.read_page(1, 2) == 0                     # past the end
+    assert ps.read_page(1, -1) > 0                     # header (Bloom unit)
+    assert ps.read_page(999, 0) == 0                   # missing file
+
+
+def test_page_store_load_detects_corruption(tmp_path):
+    ps = FilePageStore(str(tmp_path))
+    ps.write(_sst(3))
+    with open(ps.path(3), "r+b") as f:
+        f.seek(60)
+        f.write(b"\xff")
+    with pytest.raises(RuntimeError, match="CRC mismatch"):
+        ps.load(3)
+
+
+def test_page_store_pin_defers_unlink(tmp_path):
+    ps = FilePageStore(str(tmp_path))
+    for i in (1, 2, 3):
+        ps.write(_sst(i))
+    ps.set_pinned({1, 2})
+    ps.mark_dropped(1)                    # pinned: defer
+    ps.mark_dropped(3)                    # unpinned: immediate
+    assert ps.ids() == {1, 2}
+    ps.set_pinned({2})                    # pin moves on -> deferred unlink
+    assert ps.ids() == {2}
+    assert ps.gc(live_ids=set()) == []    # 2 still pinned: gc spares it
+    ps.set_pinned(set())
+    assert ps.gc(live_ids=set()) == [2]
+    assert ps.ids() == set()
+
+
+# --------------------------- manifest edit codec ------------------------------
+def test_edit_codec_fixed_cases():
+    for e in (ManifestEdit(1, "add", 0, "orders", 17, 4096, 1 << 40),
+              ManifestEdit(9, "watermark", 3, "", -1, 0, 0),
+              ManifestEdit(0, "drop", 2, "tree/with-punct", 2**50, 1, -5)):
+        out = decode_edit(encode_edit(e))
+        assert out == e
+        assert len(encode_edit(e)) % 8 == 0
+
+
+if HAVE_HYPOTHESIS:
+    names = st.text(max_size=32).map(lambda s: s.replace("\x00", ""))
+
+    @settings(max_examples=80, deadline=None)
+    @given(st.integers(0, 2**60), names, st.integers(0, 255), names,
+           st.integers(-1, 2**60), st.integers(0, 2**31),
+           st.integers(-2**60, 2**60))
+    def test_hypothesis_edit_roundtrip(version, kind, shard, tree, sst_id,
+                                       n_entries, lsn):
+        """encode_edit/decode_edit is identity for arbitrary edits --
+        unicode names, empty strings, negative sentinel ids."""
+        e = ManifestEdit(version, kind, shard, tree, sst_id, n_entries, lsn)
+        assert decode_edit(encode_edit(e)) == e
+
+
+# ------------------------- files-vs-memory differential -----------------------
+def test_files_medium_is_state_transparent(tmp_path):
+    """Same workload, both media: identical fingerprints, identical WAL
+    record streams, identical IOStats except the fsync counter (which the
+    in-memory medium never increments)."""
+    reset_sst_ids()
+    sf = ShardedStore(kill_config(2, medium="files", root=str(tmp_path)),
+                      shards=2)
+    drive(sf)
+    sf.wal.sync()
+    reset_sst_ids()
+    sm = ShardedStore(kill_config(2, medium="memory"), shards=2)
+    drive(sm)
+    assert [fingerprint(sh.store) for sh in sf.shards] \
+        == [fingerprint(sh.store) for sh in sm.shards]
+    assert [r.seq for r in sf.wal._records] == [r.seq for r in sm.wal._records]
+    vf, vm = dict(vars(sf.arena.disk.stats)), dict(vars(sm.arena.disk.stats))
+    assert vf.pop("fsyncs") > 0 and vm.pop("fsyncs") == 0
+    assert vf == vm
+    assert sf.arena.disk.page_store is not None
+    assert sm.arena.disk.page_store is None
+
+
+def test_page_files_track_live_set(tmp_path):
+    """Every on-disk sst file is either live in the manifest or pinned by
+    a retained checkpoint; merged-away unpinned tables are unlinked."""
+    reset_sst_ids()
+    s = ShardedStore(kill_config(1, medium="files", root=str(tmp_path)),
+                     shards=1)
+    drive(s)
+    ps = s.arena.disk.page_store
+    live = set(s.arena.manifest.live)
+    assert ps.ids() == live | (ps.ids() & ps._pinned)
+    assert live <= ps.ids()
+
+
+def test_open_plane_refuses_fresh_create_over_existing(tmp_path):
+    reset_sst_ids()
+    cfg = kill_config(1, medium="files", root=str(tmp_path))
+    s = ShardedStore(cfg, shards=1)
+    drive(s)
+    s.wal.sync()
+    from repro.core.storage_io import create_plane
+    with pytest.raises(FileExistsError):
+        create_plane(cfg)
+    wal, man = open_plane(cfg)            # reopen path works
+    assert wal.head_lsn == s.arena.wal.head_lsn
+    assert man.latest_checkpoint is not None
+
+
+def test_manifest_create_refuses_existing(tmp_path):
+    p = str(tmp_path / "MANIFEST")
+    ps = FilePageStore(str(tmp_path / "sst"))
+    m = FileManifest.create(p, ps)
+    m.close()
+    with pytest.raises(FileExistsError, match="already exists"):
+        FileManifest.create(p, ps)
+
+
+def test_group_pending_never_leaks_into_meta_or_checkpoint(tmp_path):
+    """Regression: under group commit, maintenance (truncation META
+    rewrites, checkpoint frames) must anchor only to *durable* WAL
+    state. A durable META/checkpoint claiming LSNs whose frames still
+    sit in the userspace group buffer would make post-kill recovery
+    fail with an incomplete replay."""
+    from repro.core.durability import recover
+    reset_sst_ids()
+    cfg = kill_config(1, medium="files", root=str(tmp_path),
+                      fsync_policy="group")
+    # group thresholds that keep frames pending across maintenance
+    cfg = StoreConfig(**{**vars(cfg), "group_commit_bytes": 1 << 20,
+                         "group_commit_max_wait_s": 3600.0})
+    s = LSMStore(cfg)
+    s.create_tree("t")
+    keys = np.arange(512)
+    s.write_batch("t", keys, keys * 5, tick=False)
+    s.wal.sync()
+    durable = s.arena.wal.durable_lsn
+    s.write_batch("t", np.arange(512, 600), np.arange(512, 600),
+                  tick=False)
+    s.scheduler.tick()                    # truncation + maybe checkpoint
+    assert not s.arena.wal.all_durable    # tail still buffered
+    # simulate the kill: abandon the in-process store (its pending
+    # frames are userspace-only, so on-disk state == post-SIGKILL state)
+    reset_sst_ids()
+    wal, man = open_plane(cfg)
+    rec = recover(cfg, wal, man)          # must not raise
+    assert rec.arena.wal.head_lsn >= durable
+    assert rec.arena.wal.head_lsn <= s.arena.wal.head_lsn
+    found, _ = rec.read_batch("t", keys)
+    assert found.all(), "synced records must survive"
+
+
+# ---------------------------- WriteAck.durable --------------------------------
+def _files_cfg(tmp_path, policy):
+    return kill_config(1, medium="files", root=str(tmp_path),
+                       fsync_policy=policy, mode="group")
+
+
+def test_writeack_durable_per_batch(tmp_path):
+    reset_sst_ids()
+    svc = StorageService(LSMStore(_files_cfg(tmp_path, "per_batch")))
+    svc.store.create_tree("t")
+    (ack,) = svc.submit([Put("t", np.arange(32))])
+    assert ack.durable is True
+
+
+def test_writeack_durable_group_then_sync(tmp_path):
+    reset_sst_ids()
+    svc = StorageService(LSMStore(_files_cfg(tmp_path, "group")))
+    svc.store.create_tree("t")
+    svc.sync()                            # tree-create frame out of the way
+    (ack,) = svc.submit([Put("t", np.arange(32))])
+    assert ack.durable is False, \
+        "group commit: ack precedes the group's fsync"
+    svc.sync()
+    assert svc.store.wal.all_durable
+    (ack2,) = svc.submit([Put("t", np.arange(32, 64))])
+    assert ack2.durable is False
+    svc.sync()
+
+
+def test_memory_medium_acks_always_durable():
+    reset_sst_ids()
+    svc = StorageService(LSMStore(kill_config(1, medium="memory",
+                                              mode="group")))
+    svc.store.create_tree("t")
+    (ack,) = svc.submit([Put("t", np.arange(8))])
+    assert ack.durable is True
