@@ -207,6 +207,11 @@ def measure(store, fn) -> dict:
         "flushes_mem": d.flushes_mem,
         "jit_compiles": d.jit_compiles,
         "jit_cache_hits": d.jit_cache_hits,
+        # One-launch read path: device launches over the window and the
+        # average number of lookup tiers each launch covered (per-tier
+        # fused -> ~1.0; cross-tier fused -> the whole store per launch).
+        "fused_launches": d.fused_launches,
+        "fused_tiers_per_launch": d.fused_tiers / max(1, d.fused_launches),
     }
     if service is not None:
         out["p50_us"] = d.lat_p50_us
@@ -215,8 +220,10 @@ def measure(store, fn) -> dict:
         out["max_stall_us"] = d.max_stall_us
     if ps0 is not None:
         ps1 = pool.stats()
-        dh = ps1["tier_hits"] - ps0["tier_hits"]
-        dm = ps1["tier_misses"] - ps0["tier_misses"]
+        dh = (ps1["tier_hits"] - ps0["tier_hits"]
+              + ps1.get("store_hits", 0) - ps0.get("store_hits", 0))
+        dm = (ps1["tier_misses"] - ps0["tier_misses"]
+              + ps1.get("store_misses", 0) - ps0.get("store_misses", 0))
         out["device_pool_hit_rate"] = dh / max(1, dh + dm)
         out["device_pool_resident_pages"] = ps1["resident_pages"]
     return out

@@ -29,9 +29,11 @@ import time
 
 import numpy as np
 
+from repro.core.lsm.sstable import partition_run
 from repro.core.service import AdaptiveGovernor, Delete, Get, Put, Scan
 from repro.core.shard import ShardRouter
 from repro.core.tuner.tuner import TunerConfig
+from repro.runtime.hbm_arbiter import HBMArbiter, HBMArbiterConfig
 from repro.runtime.hbm_tuner import HBMTuner, HBMTunerConfig
 from repro.runtime.kvcache import KVPoolConfig, PagedKVPool
 
@@ -180,6 +182,105 @@ def read_hot_path(n_batches: int, *, sst_count=16, batch=256, fused=True):
     m["lookup_p99_us"] = float(np.percentile(lat, 99))
     m["sst_count"] = len(svc.store.trees["kv"].levels.levels[-1])
     return m
+
+
+def _install_multilevel(store, tree: str, n_records: int) -> None:
+    """Install a 4-level tree with a fixed 1/3/12/48-sixty-fourths key
+    split (multiplicative hash, exact: the odd constant is invertible mod
+    64, so key*C mod 64 is a bijection on residues). Levels overlap in key
+    range -- every lookup tier covers the whole keyspace -- but each KEY
+    lives in exactly one level, so per-tier probing cannot early-exit."""
+    keys = np.arange(n_records, dtype=np.int64)
+    h = (keys * 2654435761) % 64
+    t = store.trees[tree]
+    sels = [h < 1, (h >= 1) & (h < 4), (h >= 4) & (h < 16), h >= 16]
+    for li, sel in enumerate(sels):
+        lk = keys[sel]
+        t.levels.levels[li] = partition_run(
+            lk, lk, 0, 0, t.entry_bytes, store.cfg.page_bytes,
+            store.cfg.sstable_bytes)
+
+
+def cross_tier_read(n_batches: int, *, batch=256, fused_scope=None,
+                    n_records=131_072, per_sst=2048, backend=None):
+    """One launch per lookup batch across ALL tiers: fixed Get batches
+    over a static 4-level tree (keys split across levels, so every batch
+    must consult every tier). ``fused_scope=None`` runs staged (device
+    pool off, one backend call per touched SSTable); ``"tier"`` runs the
+    PR-6 path (one launch per TIER per batch); ``"store"`` stacks every
+    tier into one ragged layout and probes the whole store in a single
+    launch -- ``launches_per_batch`` is the visible O(tiers) -> 1 drop.
+    ``backend`` pins the store's execution backend (the launch-bound
+    regime lives on the device backend, where a launch is a real kernel
+    dispatch; on the numpy reference a launch is just a function call)."""
+    kw = dict(size_ratio=4, dynamic_levels=False, static_num_levels=4,
+              sstable_bytes=per_sst * BASE["entry_bytes"])
+    if backend is not None:
+        kw["backend"] = backend
+    if fused_scope is None:
+        kw["device_pool_bytes"] = 0
+    else:
+        kw.update(device_pool_bytes=64 * MB, fused_scope=fused_scope)
+    svc = make_service(**kw)
+    svc.create_tree("kv")
+    _install_multilevel(svc.store, "kv", n_records)
+    rng = np.random.default_rng(17)
+    # warm-up: jit shape buckets + pool residency (first acquire cold-admits)
+    for _ in range(2):
+        svc.submit_strict([Get("kv", rng.integers(0, n_records, batch))])
+    lat = []
+
+    def drive():
+        for _ in range(n_batches):
+            ks = rng.integers(0, n_records, size=batch)
+            t0 = time.perf_counter()
+            svc.submit_strict([Get("kv", ks)])
+            lat.append((time.perf_counter() - t0) / batch * 1e6)
+
+    m = measure(svc, drive)
+    m["lookup_p50_us"] = float(np.percentile(lat, 50))
+    m["lookup_p99_us"] = float(np.percentile(lat, 99))
+    m["launches_per_batch"] = m["fused_launches"] / n_batches
+    m["sst_total"] = sum(len(lv) for lv
+                         in svc.store.trees["kv"].levels.levels)
+    return m
+
+
+def arbiter_flip(n_ops: int, *, n_records=32_768, batch=256):
+    """Read-heavy -> serving-heavy workload flip under the unified HBM
+    arbiter: one total budget leased across the lookup-side device pool
+    and the serving-side KV pool/prefix cache. Phase A (pure Gets, device
+    lease starved) migrates bytes device-ward; phase B (KV append churn
+    offloading pages) migrates them back toward the KV pool. The lease
+    sum is asserted byte-exact after every decision."""
+    kvp = PagedKVPool(KVPoolConfig(page_tokens=16, total_pages=2048,
+                                   pool_pages=1024, sim_pages=256))
+    arb = HBMArbiter(kvp, HBMArbiterConfig(total_bytes=48 * MB,
+                                           kv_page_bytes=16 * KB,
+                                           ops_cycle=1024),
+                     leases={"device": 2 * MB, "kv": 23 * MB,
+                             "prefix": 23 * MB})
+    svc = make_service(governor=arb, device_pool_bytes=2 * MB,
+                       size_ratio=4, dynamic_levels=False,
+                       static_num_levels=4,
+                       sstable_bytes=2048 * BASE["entry_bytes"])
+    svc.create_tree("kv")
+    _install_multilevel(svc.store, "kv", n_records)
+    rng = np.random.default_rng(23)
+    for _ in range(max(1, n_ops // batch)):        # phase A: read-heavy
+        svc.submit_strict([Get("kv", rng.integers(0, n_records, batch))])
+        assert arb.total_leased() == arb.cfg.total_bytes
+    dev_read = arb.leases["device"]
+    for i in range(n_ops):                         # phase B: serving-heavy
+        kvp.append_tokens(f"s{i % 16}", 16)
+        if i % 64 == 0:
+            svc.submit_strict([Get("kv", rng.integers(0, n_records, 32))])
+            assert arb.total_leased() == arb.cfg.total_bytes
+    return {"shift_bytes": arb.shift_bytes_total,
+            "dev_read": dev_read, "dev_serve": arb.leases["device"],
+            "kv_serve": arb.leases["kv"],
+            "leases_sum": arb.total_leased(),
+            "decisions": sum(1 for r in arb.records if r["shift_bytes"])}
 
 
 def paced_maintenance(n_ops: int, *, paced: bool, n_trees=2,
@@ -335,6 +436,45 @@ def run(full: bool = False, smoke: bool = False):
                 f"jit_compiles={m['jit_compiles']};"
                 f"jit_cache_hits={m['jit_cache_hits']};"
                 f"read_pages_per_op={m['read_pages_per_op']:.3f}"))
+    n_ct = 20 if smoke else 120
+    n_ct_recs = 32_768 if smoke else 131_072
+    for mode, scope in (("staged", None), ("fused_tier", "tier"),
+                        ("fused_store", "store")):
+        m = cross_tier_read(n_ct, fused_scope=scope, n_records=n_ct_recs)
+        rows.append(fmt_row(
+            f"kv_serving/cross_tier_read/{mode}", m["lookup_p50_us"],
+            f"scheme={mode};ssts={m['sst_total']};"
+            f"launches_per_batch={m['launches_per_batch']:.2f};"
+            f"fused_tiers_per_launch={m['fused_tiers_per_launch']:.2f};"
+            f"lookup_p50_us={m['lookup_p50_us']:.3f};"
+            f"lookup_p99_us={m['lookup_p99_us']:.3f};"
+            f"device_pool_hit_rate={m.get('device_pool_hit_rate', 0):.3f}"))
+    # The launch-bound regime: same 64 SSTables across 4 levels, pinned
+    # to the device backend where a launch is a real kernel dispatch (on
+    # the numpy reference a launch is a plain function call, so tier and
+    # store scope tie there). Smaller tables keep dispatch -- not
+    # per-element interpret cost -- the dominant term.
+    n_ct_pl = 8 if smoke else 40
+    for mode, scope in (("fused_tier", "tier"), ("fused_store", "store")):
+        m = cross_tier_read(n_ct_pl, batch=128, fused_scope=scope,
+                            n_records=32_768, per_sst=512,
+                            backend="pallas")
+        rows.append(fmt_row(
+            f"kv_serving/cross_tier_read/{mode}_pallas",
+            m["lookup_p50_us"],
+            f"scheme={mode}_pallas;ssts={m['sst_total']};"
+            f"launches_per_batch={m['launches_per_batch']:.2f};"
+            f"fused_tiers_per_launch={m['fused_tiers_per_launch']:.2f};"
+            f"lookup_p50_us={m['lookup_p50_us']:.3f};"
+            f"lookup_p99_us={m['lookup_p99_us']:.3f}"))
+    a = arbiter_flip(2_000 if smoke else 20_000,
+                     n_records=8_192 if smoke else 32_768)
+    rows.append(fmt_row(
+        "kv_serving/cross_tier_read/arbiter", a["shift_bytes"],
+        f"arbiter_shift_bytes={a['shift_bytes']};"
+        f"dev_lease_read={a['dev_read']};dev_lease_serve={a['dev_serve']};"
+        f"kv_lease_serve={a['kv_serve']};leases_sum={a['leases_sum']};"
+        f"decisions={a['decisions']}"))
     n_paced = 6_000 if smoke else (48_000 if full else 32_000)
     for label, paced in (("stop_world", False), ("paced", True)):
         m = paced_maintenance(

@@ -10,6 +10,7 @@ Importing this package stays jax-free: the pallas backend module defers
 its jax/kernel imports until first instantiation.
 """
 from .backend import (ENV_VAR, ExecutionBackend,  # noqa: F401
+                      FusedLookup, StoreLookup, StoreView, TierView,
                       available_backends, bloom_sizing, get_backend,
                       next_pow2, register_backend)
 from .numpy_backend import (NumpyBackend, ingest_order,  # noqa: F401

@@ -11,6 +11,10 @@ A backend supplies the engine's data-parallel primitives:
     -- the device-resident read hot path: one fused Bloom-probe +
     sorted-probe pipeline over a whole disjoint tier of SSTables, replacing
     the per-SSTable ``bloom_probe`` + ``lookup_batch`` staging
+  * ``prepare_store(tiers, bloom_fn)`` / ``lookup_store_fused(view,
+    queries)`` -- the cross-tier extension: every lookup tier of a tree
+    stacked into one ragged device layout, probed (Bloom + ranged search
+    + newest-wins tier argmin) in ONE device launch per lookup batch
 
 ``NumpyBackend`` carries the reference semantics; ``PallasBackend`` routes
 the same primitives through the Pallas TPU kernels (interpret mode on CPU,
@@ -99,6 +103,55 @@ class FusedLookup:
     pos: np.ndarray                # int64 [K]
     hit: np.ndarray                # bool  [K]
     vals: np.ndarray               # int64 [K]
+
+
+@dataclass
+class StoreView:
+    """Every lookup tier of one tree (newest-first: L0 groups, then disk
+    levels top-down) prepared for a single fused probe (built by
+    ``ExecutionBackend.prepare_store``).
+
+    Per-tier metadata mirrors ``TierView`` -- tuples indexed by tier rank
+    ``r`` -- except that ``tier_offs`` are offsets into the *store-wide*
+    key/val concatenation (tier-major, table order within a tier).
+    ``payload`` is the backend's resident representation of the whole
+    stack; the ``DevicePagePool`` accounts its pages exactly like a
+    per-tier view's.
+    """
+
+    backend: str
+    key: tuple                     # tuple of per-tier sst_id tuples
+    tier_starts: tuple             # per tier: int64 [T_r] min_key
+    tier_ends: tuple               # per tier: int64 [T_r] max_key
+    tier_offs: tuple               # per tier: int64 [T_r] GLOBAL offsets
+    tier_lens: tuple               # per tier: int64 [T_r] entries/table
+    payload: object                # backend-owned resident arrays
+
+    @property
+    def num_tiers(self) -> int:
+        return len(self.key)
+
+    @property
+    def num_tables(self) -> int:
+        return sum(len(k) for k in self.key)
+
+
+@dataclass
+class StoreLookup:
+    """Per-(tier, query) results of one fused store probe. Every [R, K]
+    field carries, for tier rank ``r``, exactly what a per-tier
+    ``FusedLookup`` would have carried for that tier (``ti`` is
+    tier-local), so the caller can replay the staged path's pin sequence
+    tier by tier. ``win`` is the on-device newest-wins resolution: the
+    first (newest) tier rank whose probe hit, -1 when no tier did."""
+
+    ti: np.ndarray                 # int64 [R, K] tier-local table index
+    ok: np.ndarray                 # bool  [R, K]
+    positive: np.ndarray           # bool  [R, K]
+    pos: np.ndarray                # int64 [R, K] relative to the table's run
+    hit: np.ndarray                # bool  [R, K]
+    vals: np.ndarray               # int64 [R, K]
+    win: np.ndarray                # int64 [K] first tier rank with a hit
 
 
 def assign_bounds(starts, ends, qkeys):
@@ -198,6 +251,27 @@ class ExecutionBackend:
         staged loop of per-table ``bloom_probe`` + ``lookup_batch`` calls.
         Returns a ``FusedLookup``, or ``None`` when the queries fall
         outside the backend's domain (caller falls back to staged)."""
+        raise NotImplementedError
+
+    def prepare_store(self, tiers, bloom_fn):
+        """Build a resident ``StoreView`` over every non-empty lookup tier
+        of one tree, ordered newest-first. Each element of ``tiers`` is a
+        disjoint, min_key-sorted table list (what ``prepare_tier`` takes).
+        Returns ``None`` when the stack cannot be made resident (any tier
+        outside the kernel domain); the caller then falls back to the
+        per-tier fused path, and from there to staged."""
+        raise NotImplementedError
+
+    def lookup_store_fused(self, view: StoreView, queries):
+        """Fused cross-tier probe: every query against every tier of the
+        store in ONE device launch -- stacked Bloom probe, ranged sorted
+        probe over the store-wide concatenation, and the newest-wins tier
+        argmin, composed in a single jitted invocation.
+
+        Field-for-field per tier, results must be bit-identical to R
+        independent ``lookup_fused`` calls (which are themselves
+        bit-identical to the staged loop). Returns a ``StoreLookup``, or
+        ``None`` when the queries fall outside the backend's domain."""
         raise NotImplementedError
 
 

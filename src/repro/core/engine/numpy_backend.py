@@ -11,8 +11,8 @@ from __future__ import annotations
 import numpy as np
 
 from .backend import (BLOOM_K_HASHES, ExecutionBackend, FusedLookup,
-                      TierView, assign_bounds, bloom_sizing,
-                      register_backend)
+                      StoreLookup, StoreView, TierView, assign_bounds,
+                      bloom_sizing, register_backend)
 
 # Same int32 constants as kernels/bloom/ref.py (golden-ratio multipliers).
 C1 = np.int32(0x9E3779B1 - 2**32)
@@ -177,10 +177,14 @@ class NumpyBackend(ExecutionBackend):
         slots = (h1.astype(np.int64)[:, None]
                  + j[None, :] * h2.astype(np.int64)[:, None]) % n64[:, None]
         positive = p["fbits"][p["f_offs"][ti][:, None] + slots].all(axis=-1)
-        # Sorted probe, confined to each query's table slice.
+        # Sorted probe, confined to each query's table slice. The tier's
+        # tables are disjoint and min_key-ordered, so the concatenation is
+        # globally sorted: one C-level searchsorted clipped to the slice
+        # is exactly ``lower_bound_ranged`` (inside the slice both agree;
+        # outside, the ranged search clamps to the bound it clipped to).
         lo = view.offs[ti]
         lens = view.lens[ti]
-        abs_pos = lower_bound_ranged(p["keys"], lo, lo + lens, q)
+        abs_pos = np.clip(np.searchsorted(p["keys"], q), lo, lo + lens)
         pos = abs_pos - lo
         inb = pos < lens
         safe = np.minimum(abs_pos, len(p["keys"]) - 1)
@@ -189,6 +193,104 @@ class NumpyBackend(ExecutionBackend):
         vals = np.where(hit, p["vals"][safe], 0).astype(np.int64)
         return FusedLookup(ti=ti, ok=ok, positive=positive,
                            pos=pos.astype(np.int64), hit=hit, vals=vals)
+
+    # -- fused store (cross-tier) probe --------------------------------------
+    def prepare_store(self, tiers, bloom_fn):
+        """Host-resident cross-tier view: the whole store's key/val runs
+        and Bloom bits in one tier-major concatenation. Never refuses."""
+        tables = [t for tier in tiers for t in tier]
+        filts = [np.asarray(bloom_fn(t)) for t in tables]
+        f_lens = np.array([len(f) for f in filts], np.int64)
+        f_offs = np.cumsum(f_lens) - f_lens
+        lens = np.array([t.num_entries for t in tables], np.int64)
+        offs = np.cumsum(lens) - lens
+        counts = np.array([len(tier) for tier in tiers], np.int64)
+        t_off = np.cumsum(counts) - counts
+        cat = lambda arrs, dt: (np.concatenate(arrs) if arrs  # noqa: E731
+                                else np.zeros(0, dt))
+        payload = {
+            "keys": cat([t.keys for t in tables], np.int64),
+            "vals": cat([t.vals for t in tables], np.int64),
+            "fbits": cat(filts, bool),
+            "f_offs": f_offs,
+            "nslots": f_lens,
+            "t_off": t_off,           # tier rank -> first global table index
+        }
+        return StoreView(
+            backend=self.name,
+            key=tuple(tuple(t.sst_id for t in tier) for tier in tiers),
+            tier_starts=tuple(np.array([t.min_key for t in tier], np.int64)
+                              for tier in tiers),
+            tier_ends=tuple(np.array([t.max_key for t in tier], np.int64)
+                            for tier in tiers),
+            tier_offs=tuple(offs[t_off[r]:t_off[r] + counts[r]]
+                            for r in range(len(tiers))),
+            tier_lens=tuple(lens[t_off[r]:t_off[r] + counts[r]]
+                            for r in range(len(tiers))),
+            payload=payload)
+
+    def lookup_store_fused(self, view, queries):
+        """One vectorized pass over the whole store: per-tier table
+        assignment (same ``assign_bounds`` as the per-tier path), one
+        [R, K] Bloom gather, ONE ranged lower-bound search over the
+        store-wide concatenation, and the newest-wins tier argmin --
+        field-for-field identical to R independent ``lookup_fused``
+        calls."""
+        q = np.asarray(queries, np.int64)
+        p = view.payload
+        R, K = view.num_tiers, len(q)
+        if R == 0:
+            return StoreLookup(
+                ti=np.zeros((0, K), np.int64), ok=np.zeros((0, K), bool),
+                positive=np.zeros((0, K), bool),
+                pos=np.zeros((0, K), np.int64), hit=np.zeros((0, K), bool),
+                vals=np.zeros((0, K), np.int64),
+                win=np.full(K, -1, np.int64))
+        ti = np.empty((R, K), np.int64)
+        ok = np.empty((R, K), bool)
+        for r in range(R):
+            ti[r], ok[r] = assign_bounds(view.tier_starts[r],
+                                         view.tier_ends[r], q)
+        gti = p["t_off"][:, None] + ti              # global table index [R,K]
+        # Bloom: identical hash math to lookup_fused, flattened over (r, k).
+        n64 = p["nslots"][gti]
+        n32 = n64.astype(np.int32)
+        k32 = np.broadcast_to(q.astype(np.int32), (R, K))
+        h1 = (k32 * C1) % n32
+        h2 = ((k32 * C2) | np.int32(1)) % n32
+        j = np.arange(self.k_hashes, dtype=np.int64)
+        slots = (h1.astype(np.int64)[..., None]
+                 + j * h2.astype(np.int64)[..., None]) % n64[..., None]
+        positive = p["fbits"][p["f_offs"][gti][..., None]
+                              + slots].all(axis=-1)
+        # Sorted probe per tier: each tier's segment of the store-wide
+        # concatenation is itself globally sorted (disjoint,
+        # min_key-ordered tables), so one C-level searchsorted per tier
+        # clipped to each query's table slice is exactly the ranged lower
+        # bound ``lower_bound_ranged`` computes (inside the slice both
+        # agree; outside, the ranged search clamps to the clipped bound).
+        abs_pos = np.empty((R, K), np.int64)
+        for r in range(R):
+            s0 = int(view.tier_offs[r][0])
+            s1 = s0 + int(view.tier_lens[r].sum())
+            abs_pos[r] = s0 + np.searchsorted(p["keys"][s0:s1], q)
+        lo = np.stack([view.tier_offs[r][ti[r]] for r in range(R)])
+        lens = np.stack([view.tier_lens[r][ti[r]] for r in range(R)])
+        np.clip(abs_pos, lo, lo + lens, out=abs_pos)
+        pos = abs_pos - lo
+        inb = pos < lens
+        safe = np.minimum(abs_pos, len(p["keys"]) - 1)
+        hit = np.zeros((R, K), bool)
+        qb = np.broadcast_to(q, (R, K))
+        hit[inb] = p["keys"][safe[inb]] == qb[inb]
+        vals = np.where(hit, p["vals"][safe], 0).astype(np.int64)
+        # Newest-wins: first (lowest-rank) tier with a hit; a query can
+        # match at most one table per tier (tiers are disjoint).
+        win = np.where(hit.any(axis=0),
+                       np.argmax(hit, axis=0), -1).astype(np.int64)
+        return StoreLookup(ti=ti, ok=ok, positive=positive,
+                           pos=pos.astype(np.int64), hit=hit, vals=vals,
+                           win=win)
 
 
 register_backend("numpy", NumpyBackend)

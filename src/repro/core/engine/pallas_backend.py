@@ -17,8 +17,8 @@ from __future__ import annotations
 import numpy as np
 
 from .backend import (BLOOM_K_HASHES, ExecutionBackend, FusedLookup,
-                      TierView, assign_bounds, bloom_sizing, next_pow2,
-                      register_backend)
+                      StoreLookup, StoreView, TierView, assign_bounds,
+                      bloom_sizing, next_pow2, register_backend)
 from .numpy_backend import NumpyBackend, ingest_order
 
 _INT32_MAX = 2**31 - 1
@@ -256,6 +256,112 @@ class PallasBackend(ExecutionBackend):
         return FusedLookup(ti=ti, ok=ok, positive=positive,
                            pos=(abs_pos - view.offs[ti]).astype(np.int64),
                            hit=hit, vals=vals.astype(np.int64))
+
+    # -- fused store (cross-tier) probe --------------------------------------
+    def prepare_store(self, tiers, bloom_fn):
+        """Device-resident view of EVERY lookup tier of one tree: all
+        tables' key/val runs as one INT_MAX-padded int32 concatenation
+        (tier-major), all Bloom filters as one stacked [Tg*128, Wmax]
+        array, plus the static global-table -> tier-rank map the fused
+        kernel grids over. Refusal conditions are the per-tier ones,
+        applied across the whole stack."""
+        tables = [t for tier in tiers for t in tier]
+        if not (all(_int32_safe_sorted(t.keys) for t in tables)
+                and _int32_safe_vals([t.vals for t in tables])):
+            self.fallback_calls += 1
+            return None
+        filts = []
+        for t in tables:
+            kind, f = bloom_fn(t)
+            if kind != "pallas":
+                self.fallback_calls += 1
+                return None
+            filts.append(f)                      # bool [128, W_t]
+        wmax = max((f.shape[1] for f in filts), default=1)
+        if wmax > self.fused_wmax:
+            return None
+        fstack = np.zeros((len(tables) * 128, wmax), bool)
+        for i, f in enumerate(filts):
+            fstack[i * 128:(i + 1) * 128, :f.shape[1]] = f
+        lens = np.array([t.num_entries for t in tables], np.int64)
+        offs = (np.concatenate([[0], np.cumsum(lens)[:-1]])
+                if len(tables) else np.zeros(0, np.int64))
+        counts = np.array([len(tier) for tier in tiers], np.int64)
+        t_off = (np.concatenate([[0], np.cumsum(counts)[:-1]])
+                 if len(tiers) else np.zeros(0, np.int64))
+        total = int(lens.sum())
+        npad = next_pow2(max(1, total))
+        ck = np.full(npad, _INT32_MAX, np.int32)
+        cv = np.zeros(npad, np.int32)
+        if total:
+            ck[:total] = np.concatenate([t.keys for t in tables])
+            cv[:total] = np.concatenate([t.vals for t in tables])
+        jnp = self._jnp
+        payload = {
+            "keys": jnp.asarray(ck),
+            "vals": jnp.asarray(cv),
+            "fstack": jnp.asarray(fstack),
+            "nslots_t": np.array([128 * f.shape[1] for f in filts],
+                                 np.int32),
+            "w_t": np.array([f.shape[1] for f in filts], np.int32),
+            "t_off": t_off,
+            "tier_of": tuple(r for r, tier in enumerate(tiers)
+                             for _ in tier),
+            "npad": npad,
+        }
+        return StoreView(
+            backend=self.name,
+            key=tuple(tuple(t.sst_id for t in tier) for tier in tiers),
+            tier_starts=tuple(np.array([t.min_key for t in tier], np.int64)
+                              for tier in tiers),
+            tier_ends=tuple(np.array([t.max_key for t in tier], np.int64)
+                            for tier in tiers),
+            tier_offs=tuple(offs[t_off[r]:t_off[r] + counts[r]]
+                            for r in range(len(tiers))),
+            tier_lens=tuple(lens[t_off[r]:t_off[r] + counts[r]]
+                            for r in range(len(tiers))),
+            payload=payload)
+
+    def lookup_store_fused(self, view, queries):
+        """ONE device launch for the whole store: the composed
+        ``lookup_store_device`` jit fuses the stacked Bloom probe, the
+        cross-tier ranged sorted probe, and the newest-wins tier argmin,
+        in place of the per-tier fused path's two launches *per tier*."""
+        q = np.asarray(queries)
+        if not _int32_safe_keys([q]):
+            self.fallback_calls += 1
+            return None
+        p = view.payload
+        R, K = view.num_tiers, len(q)
+        if R == 0:
+            return StoreLookup(
+                ti=np.zeros((0, K), np.int64), ok=np.zeros((0, K), bool),
+                positive=np.zeros((0, K), bool),
+                pos=np.zeros((0, K), np.int64), hit=np.zeros((0, K), bool),
+                vals=np.zeros((0, K), np.int64),
+                win=np.full(K, -1, np.int64))
+        q64 = q.astype(np.int64)
+        ti = np.empty((R, K), np.int64)
+        ok = np.empty((R, K), bool)
+        lo = np.empty((R, K), np.int64)
+        hi = np.empty((R, K), np.int64)
+        for r in range(R):
+            ti[r], ok[r] = assign_bounds(view.tier_starts[r],
+                                         view.tier_ends[r], q64)
+            lo[r] = view.tier_offs[r][ti[r]]
+            hi[r] = lo[r] + view.tier_lens[r][ti[r]]
+        gti = p["t_off"][:, None] + ti
+        kpad = next_pow2(max(1, K), lo=256)
+        self._note_jit("store_fused", p["tier_of"],
+                       int(p["fstack"].shape[1]), p["npad"], kpad)
+        member, abs_pos, hit, vals, win = self._merge_ops.lookup_store_device(
+            p["fstack"], p["keys"], p["vals"], q.astype(np.int32),
+            gti, p["nslots_t"][gti], p["w_t"][gti], lo, hi,
+            tier_of=p["tier_of"], k_hashes=self.k_hashes,
+            interpret=self.interpret)
+        return StoreLookup(ti=ti, ok=ok, positive=member,
+                           pos=(abs_pos - lo).astype(np.int64),
+                           hit=hit, vals=vals, win=win)
 
 
 register_backend("pallas", PallasBackend)

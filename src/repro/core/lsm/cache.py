@@ -36,6 +36,15 @@ class IOStats:
     fsyncs: int = 0                 # physical fsync calls (files medium:
                                     # WAL commits + SSTable/manifest writes;
                                     # always 0 on the in-memory medium)
+    fused_launches: int = 0         # fused read-path device launches
+                                    # (one per store probe, or one per
+                                    # tier on the per-tier fused path)
+    fused_tiers: int = 0            # lookup tiers covered by those
+                                    # launches: tiers/launches is the
+                                    # launch-collapse factor BENCH rows
+                                    # report as fused_tiers_per_launch
+    fused_tier_hits: int = 0        # covered tiers that resolved >= 1
+    fused_tier_misses: int = 0      # query vs. those that resolved none
     jit_compiles: int = 0           # backend jit shape-bucket compiles
     jit_cache_hits: int = 0         # backend jit shape-bucket cache hits
                                     # (both 0 on store paths; benchmark
@@ -204,6 +213,36 @@ class Disk:
                 return
         for p in pages:
             self.query_pin(sst_id, int(p))
+
+    def pin_run(self, sst_ids, pages) -> None:
+        """Ordered bulk query pins across possibly many tables -- the
+        fused replay's hot path. Accounting is identical to calling
+        ``query_pin(sst_ids[i], pages[i])`` for every i in sequence; the
+        loop just binds the cache's hit path locally so a replay of a few
+        hundred pins does not pay four attribute lookups and two call
+        frames per page. Callers pass plain int sequences (``.tolist()``)
+        so installed pids stay python-int keyed like the scalar path's.
+        """
+        cache = self.cache
+        slot_of = cache._slot_of
+        ref = cache._ref
+        self.stats.query_pins += len(sst_ids)
+        hits = 0
+        for pid in zip(sst_ids, pages):
+            s = slot_of.get(pid)
+            if s is not None:
+                ref[s] = 1
+                hits += 1
+                continue
+            cache.misses += 1
+            if cache.capacity > 0:
+                cache._install(pid)
+            self.stats.pages_query_read += 1
+            if self.ghost is not None:
+                self.ghost.on_disk_read(pid, merge=False)
+            if self.page_store is not None:
+                self.page_store.read_page(pid[0], pid[1])
+        cache.hits += hits
 
     def merge_pin(self, sst_id: int, page_index: int) -> None:
         self.stats.merge_pins += 1

@@ -44,10 +44,15 @@ class DevicePagePool:
         self.backend = backend
         self.page_bytes = max(1, int(page_bytes))
         self.cache = ClockCache(0, on_evict=self._on_evict)
-        self._views: dict = {}        # sst_ids tuple -> TierView | None
+        self._views: dict = {}        # view key -> Tier/StoreView | None
         self._views_of: dict = {}     # sst_id -> set of view keys
         self.tier_hits = 0            # tiers served fused
         self.tier_misses = 0          # tiers that fell back to staged
+        self.store_hits = 0           # whole stores served one-launch
+        self.store_misses = 0         # stores that fell back per-tier
+        self._gen = 0                 # budget generation: bumped by every
+                                      # set_budget_bytes so an in-flight
+                                      # prepare races a shrink safely
         self.set_budget_bytes(budget_bytes)
 
     # -- budget (the governor's knob) ---------------------------------------
@@ -60,6 +65,7 @@ class DevicePagePool:
         return self._budget_bytes
 
     def set_budget_bytes(self, budget_bytes: int) -> None:
+        self._gen += 1
         self._budget_bytes = max(0, int(budget_bytes))
         self.cache.resize(self._budget_bytes // self.page_bytes)
         if not self.enabled:
@@ -67,13 +73,23 @@ class DevicePagePool:
             self._views_of.clear()
 
     # -- invalidation -------------------------------------------------------
+    @staticmethod
+    def _key_ssts(key):
+        """sst_ids of a view key: a flat tuple (tier view) or a tuple of
+        per-tier tuples (store view)."""
+        for s in key:
+            if isinstance(s, tuple):
+                yield from s
+            else:
+                yield s
+
     def _on_evict(self, pid) -> None:
         self._drop_views(pid[0])
 
     def _drop_views(self, sst_id) -> None:
         for key in self._views_of.pop(sst_id, ()):
             self._views.pop(key, None)
-            for s in key:
+            for s in self._key_ssts(key):
                 if s != sst_id and s in self._views_of:
                     self._views_of[s].discard(key)
 
@@ -121,7 +137,14 @@ class DevicePagePool:
             return None
         for pid in pids:          # resident: refresh every reference bit
             self.cache.pin(pid)
+        gen = self._gen
         view = self.backend.prepare_tier(tables, bloom_fn)
+        if self._gen != gen:
+            # A budget change (e.g. governor shrink) raced the prepare:
+            # residency may no longer hold, so do not cache or serve the
+            # view -- this call stays staged and re-evaluates next batch.
+            self.tier_misses += 1
+            return None
         self._views[key] = view
         for s in key:
             self._views_of.setdefault(s, set()).add(key)
@@ -131,11 +154,56 @@ class DevicePagePool:
         self.tier_hits += 1
         return view
 
+    def acquire_store(self, tiers, bloom_fn):
+        """Return a resident ``StoreView`` over every lookup tier of one
+        tree (newest-first), or None when the caller must fall back to
+        the per-tier path this batch. Same lifecycle as ``acquire``, with
+        residency judged over the union of every tier's pages: fully
+        resident -> refresh + serve (preparing and caching the stacked
+        view on first touch); anything absent -> admit and fall back."""
+        if not self.enabled or not tiers:
+            return None
+        key = tuple(tuple(t.sst_id for t in tier) for tier in tiers)
+        view = self._views.get(key, _ABSENT)
+        if view is not _ABSENT:
+            if view is None:      # cached refusal (kernel-domain etc.)
+                self.store_misses += 1
+                return None
+            self.store_hits += 1
+            return view
+        pids = [(t.sst_id, p) for tier in tiers for t in tier
+                for p in range(-1, t.num_pages)]
+        if len(pids) > self.cache.capacity:
+            self.store_misses += 1
+            return None
+        if not all(pid in self.cache for pid in pids):
+            self.store_misses += 1
+            for pid in pids:
+                self.cache.pin(pid)
+            return None
+        for pid in pids:
+            self.cache.pin(pid)
+        gen = self._gen
+        view = self.backend.prepare_store(tiers, bloom_fn)
+        if self._gen != gen:      # budget shrink raced the prepare
+            self.store_misses += 1
+            return None
+        self._views[key] = view
+        for s in self._key_ssts(key):
+            self._views_of.setdefault(s, set()).add(key)
+        if view is None:
+            self.store_misses += 1
+            return None
+        self.store_hits += 1
+        return view
+
     # -- reporting ----------------------------------------------------------
     def stats(self) -> dict:
         return {
             "tier_hits": self.tier_hits,
             "tier_misses": self.tier_misses,
+            "store_hits": self.store_hits,
+            "store_misses": self.store_misses,
             "page_hits": self.cache.hits,
             "page_misses": self.cache.misses,
             "resident_pages": len(self.cache),

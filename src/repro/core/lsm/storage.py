@@ -109,6 +109,12 @@ class StoreConfig:
     # the pool disabled and every lookup on the staged per-SSTable path.
     # Governors resize it at runtime via MemoryPlan.device_pool_bytes.
     device_pool_bytes: int = 0
+    # Fused-read launch scope once the pool holds a tier resident:
+    # "store" collapses the whole lookup (every tier) into ONE device
+    # launch per batch, falling back per-tier then staged; "tier" keeps
+    # the PR-6 one-launch-per-tier pipeline. Results, page pins and
+    # IOStats are bit-identical across all three paths.
+    fused_scope: str = "store"
     # Max discretionary maintenance units per scheduler tick (None = drain
     # all merge debt every tick). Mandatory memory/log enforcement is never
     # budgeted.
@@ -161,6 +167,11 @@ class StoreConfig:
             raise ValueError(
                 f"device_pool_bytes must be >= 0 (0 disables the device "
                 f"page pool), got {self.device_pool_bytes}")
+        if self.fused_scope not in ("store", "tier"):
+            raise ValueError(
+                f"fused_scope must be 'store' (one launch per lookup "
+                f"batch) or 'tier' (one per tier), got "
+                f"{self.fused_scope!r}")
         if self.merge_budget is not None and self.merge_budget < 0:
             raise ValueError(
                 f"merge_budget must be >= 0 (or None to drain all debt "
@@ -273,7 +284,7 @@ class LSMStore:
             l0_greedy=cfg.l0_greedy, l0_grouped=cfg.l0_grouped,
             dynamic_levels=cfg.dynamic_levels,
             static_num_levels=cfg.static_num_levels,
-            backend=self.backend,
+            backend=self.backend, fused_scope=cfg.fused_scope,
             manifest=self.arena.manifest, shard_id=self.shard_id)
         self.trees[name] = tree
         # Schema record: one TreeCreate per logical tree (the WAL dedups

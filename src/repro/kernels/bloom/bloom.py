@@ -142,6 +142,72 @@ def probe_filters_multi(fstack, keys, ti, nslots, w, *, k_hashes: int = 7,
     return out.reshape(-1)
 
 
+def _probe_tiered_kernel(keys_ref, ti_ref, ns_ref, w_ref, filt_ref, out_ref,
+                         *, wmax, k_hashes):
+    """Cross-tier twin of ``_probe_multi_kernel``: grid step (i, t) probes
+    query tile i against *global* table t's filter block and writes table
+    t's own output row -- each (t, i) block is visited exactly once, so no
+    accumulation is needed (and the index maps stay constant-free, a
+    Pallas requirement). The caller segment-sums table rows into tier
+    rows."""
+    t = pl.program_id(1)
+    keys = keys_ref[...].reshape(-1)
+    ti = ti_ref[...].reshape(-1)                 # GLOBAL assigned table
+    ns = ns_ref[...].reshape(-1)
+    w = w_ref[...].reshape(-1)
+    k = keys.shape[0]
+    # Same double hash as _hash_onehots, modulus per query.
+    h1 = (keys * C1) % ns
+    h2 = ((keys * C2) | 1) % ns
+    j = jax.lax.broadcasted_iota(jnp.int32, (k, k_hashes), 1)
+    slots = (h1[:, None] + j * h2[:, None]) % ns[:, None]        # [K, k]
+    row = (slots // w[:, None]).reshape(-1)
+    col = (slots % w[:, None]).reshape(-1)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (row.shape[0], 128), 1)
+    c_iota = jax.lax.broadcasted_iota(jnp.int32, (row.shape[0], wmax), 1)
+    oh_r = (row[:, None] == r_iota).astype(jnp.float32)
+    oh_c = (col[:, None] == c_iota).astype(jnp.float32)
+    rows = jax.lax.dot(oh_r, filt_ref[...].astype(jnp.float32),
+                       precision=jax.lax.Precision.HIGHEST)      # [K*k, Wmax]
+    vals = jnp.sum(rows * oh_c, axis=-1).reshape(k, k_hashes)
+    member = jnp.all(vals > 0, axis=-1)
+    out_ref[...] = jnp.where(ti == t, member,
+                             False).astype(jnp.int32)[None, :]
+
+
+@partial(jax.jit, static_argnames=("k_hashes", "tile", "interpret"))
+def probe_filters_tiered(fstack, keys, ti, nslots, w, *, k_hashes: int = 7,
+                         tile: int = 256, interpret: bool = True):
+    """fstack [Tg*128, Wmax]: ALL tables of ALL tiers of a store, stacked
+    tier-major. keys [K]; ti/nslots/w are per (table, query) [Tg, K]: row
+    t carries the GLOBAL covering-table index (and its filter geometry)
+    that *t's tier* assigned each query (-1 = none, never a member).
+    Returns int32 [Tg, K]: out[t, q] = 1 iff table t is q's assigned
+    table in its tier AND the filter reports membership -- tier
+    membership is the segment-sum of its tables' rows. One grid
+    (K/tile, Tg), the same total step count as per-tier
+    ``probe_filters_multi`` sweeps over every tier, collapsed into ONE
+    launch; VMEM still holds one [128, Wmax] filter block per step."""
+    k = keys.shape[0]
+    assert k % tile == 0 and fstack.shape[0] % 128 == 0
+    t_count = fstack.shape[0] // 128
+    assert ti.shape[0] == t_count
+    wmax = fstack.shape[1]
+    row_of = lambda i, t: (t, i)                 # noqa: E731
+    return pl.pallas_call(
+        partial(_probe_tiered_kernel, wmax=wmax, k_hashes=k_hashes),
+        grid=(k // tile, t_count),
+        in_specs=[pl.BlockSpec((1, tile), lambda i, t: (0, i)),
+                  pl.BlockSpec((1, tile), row_of),
+                  pl.BlockSpec((1, tile), row_of),
+                  pl.BlockSpec((1, tile), row_of),
+                  pl.BlockSpec((128, wmax), lambda i, t: (t, 0))],
+        out_specs=pl.BlockSpec((1, tile), row_of),
+        out_shape=jax.ShapeDtypeStruct((t_count, k), jnp.int32),
+        interpret=interpret,
+    )(keys.reshape(1, -1), ti, nslots, w, fstack)
+
+
 @partial(jax.jit, static_argnames=("k_hashes", "tile", "interpret"))
 def probe_filter(filt, keys, *, k_hashes: int = 7, tile: int = 256,
                  interpret: bool = True):

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..bloom.bloom import probe_filters_tiered
 from ..sizing import next_pow2
 from .merge import merge_tiles
 from .ref import merge_tiles_ref
@@ -180,6 +181,92 @@ def lookup_runs_device(keys, vals, lo, hi, queries):
     return (np.asarray(pos[:n]).astype(np.int64),
             np.asarray(hit[:n]).astype(bool),
             np.asarray(val[:n]).astype(np.int64))
+
+
+@partial(jax.jit, static_argnames=("tier_of", "k_hashes", "btile",
+                                   "interpret"))
+def _store_probe(fstack, keys, vals, q, gti_t, ns_t, w_t, lo, hi, *,
+                 tier_of, k_hashes, btile, interpret):
+    """The whole cross-tier read in ONE jitted invocation: the stacked
+    tiered Bloom probe (per-table rows, segment-summed into per-tier
+    membership by ``tier_of``), the ranged sorted probe of every
+    (tier, query) pair over the store-wide concatenation, and the
+    newest-wins tier argmin. Per tier, results are exactly what the
+    per-tier fused pair (``probe_filters_multi`` + ``_ranged_lookup``)
+    would produce."""
+    per_table = probe_filters_tiered(fstack.astype(jnp.int32), q,
+                                     gti_t, ns_t, w_t, k_hashes=k_hashes,
+                                     tile=btile,
+                                     interpret=interpret)    # [Tg, kpad]
+    r, kpad = lo.shape
+    member = jax.ops.segment_sum(per_table,
+                                 jnp.asarray(tier_of, jnp.int32),
+                                 num_segments=r) > 0         # [R, kpad]
+    qf = jnp.broadcast_to(q[None, :], (r, kpad)).reshape(-1)
+    pos, hit, val = _ranged_lookup(keys, vals, lo.reshape(-1),
+                                   hi.reshape(-1), qf)
+    pos = pos.reshape(r, kpad)
+    hit = hit.reshape(r, kpad)
+    val = val.reshape(r, kpad)
+    # Newest-wins: the smallest tier rank whose probe hit, -1 when none
+    # did (a hit implies a covering table, so ranking `hit` alone is the
+    # staged path's first-resolving-tier order).
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (r, kpad), 0)
+    win = jnp.min(jnp.where(hit, ridx, r), axis=0)
+    return member, pos, hit, val, jnp.where(win < r, win, -1)
+
+
+def lookup_store_device(fstack, keys, vals, queries, gti, ns, w, lo, hi, *,
+                        tier_of: tuple, k_hashes: int = 7, btile: int = 256,
+                        interpret: bool = True):
+    """Store-sized fused cross-tier probe: ``queries`` against every
+    lookup tier of a tree in a single device launch.
+
+    ``fstack`` [Tg*128, Wmax] stacks all tables of all tiers tier-major
+    (``tier_of``: global table index -> tier rank, static); ``keys``/
+    ``vals`` are the store-wide INT_MAX-padded concatenation. Per
+    (tier, query) metadata is [R, K]: ``gti`` the GLOBAL covering-table
+    index (clipped, as ``assign_bounds`` leaves it), ``ns``/``w`` that
+    table's filter geometry, ``lo``/``hi`` its run's span in the
+    concatenation. Queries bucket to a power of two (>= 256); padding
+    probes nothing (gti=-1) and searches nothing (lo=hi=0).
+
+    Returns numpy (member [R,K] bool, abs_pos [R,K], hit [R,K], val
+    [R,K], win [K]) with ``win`` the newest-wins tier rank (-1 = miss).
+    """
+    q = np.asarray(queries, np.int32)
+    tmap = np.asarray(tier_of, np.int64)         # [Tg] table -> tier rank
+    # Expand per-tier metadata to per-table rows (the constant-free block
+    # layout the kernel grids over): row t repeats its tier's row.
+    gti_t = np.asarray(gti, np.int32)[tmap]
+    ns_t = np.asarray(ns, np.int32)[tmap]
+    w_t = np.asarray(w, np.int32)[tmap]
+    lo = np.asarray(lo, np.int32)
+    hi = np.asarray(hi, np.int32)
+    r_count = lo.shape[0]
+    t_count = len(tier_of)
+    n = q.shape[0]
+    m = next_pow2(max(1, n), lo=256)
+    if m > n:
+        pad = m - n
+        q = np.concatenate([q, np.zeros(pad, np.int32)])
+        zt = np.zeros((t_count, pad), np.int32)
+        gti_t = np.concatenate([gti_t, zt - 1], axis=1)
+        ns_t = np.concatenate([ns_t, zt + 128], axis=1)
+        w_t = np.concatenate([w_t, zt + 1], axis=1)
+        zr = np.zeros((r_count, pad), np.int32)
+        lo = np.concatenate([lo, zr], axis=1)
+        hi = np.concatenate([hi, zr], axis=1)
+    member, pos, hit, val, win = _store_probe(
+        jnp.asarray(fstack), keys, vals, jnp.asarray(q),
+        jnp.asarray(gti_t), jnp.asarray(ns_t), jnp.asarray(w_t),
+        jnp.asarray(lo), jnp.asarray(hi), tier_of=tier_of,
+        k_hashes=k_hashes, btile=btile, interpret=interpret)
+    return (np.asarray(member[:, :n]).astype(bool),
+            np.asarray(pos[:, :n]).astype(np.int64),
+            np.asarray(hit[:, :n]).astype(bool),
+            np.asarray(val[:, :n]).astype(np.int64),
+            np.asarray(win[:n]).astype(np.int64))
 
 
 def merge_runs_device(runs, *, tile: int = 512, use_kernel: bool = True,

@@ -20,7 +20,11 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..core.service.governor import MemoryGovernor, MemoryPlan
+from ..core.service.governor import (DevicePoolGovernor,  # noqa: F401
+                                     MemoryGovernor, MemoryPlan)
+# DevicePoolGovernor moved to core/service/governor.py (it is a
+# storage-service policy, not a serving-runtime tuner); re-exported
+# here for existing importers.
 from ..core.tuner.tuner import TunerConfig, newton_step
 from .kvcache import PagedKVPool
 
@@ -119,62 +123,3 @@ class HBMGovernor(MemoryGovernor):
         # StorageService mis-actuate it as an LSM write-memory size.
         return MemoryPlan(device_pool_bytes=self.device_pool_bytes,
                           note=f"hbm-pool-pages:{int(rec['x_next'])}")
-
-
-class DevicePoolGovernor(MemoryGovernor):
-    """Adaptive sizing of the fused-read device page pool from its own
-    hit/miss stream, through the standard ``MemoryPlan`` actuation.
-
-    Every ``ops_cycle`` logical store operations it takes the pool's tier
-    hit/miss deltas: while tiers keep failing residency (cold pool or a
-    budget too small for the working tiers) the budget doubles toward
-    ``max_bytes``; when the fused path is serving and the clock holds
-    fewer pages than half the capacity, the slack is returned (halved,
-    floored at ``min_bytes``). Decisions are emitted, not self-actuated:
-    ``StorageService._apply_plan`` -> ``MemoryArena.set_device_pool_bytes``
-    is the single writer of the budget, same as the write-memory split.
-    """
-
-    def __init__(self, *, min_bytes: int = 1 << 20,
-                 max_bytes: int = 256 << 20, ops_cycle: int = 2048):
-        self.min_bytes = int(min_bytes)
-        self.max_bytes = int(max_bytes)
-        self.ops_cycle = int(ops_cycle)
-        self._last_ops = 0
-        self._last: dict | None = None
-        self.records: list = []
-
-    def attach(self, store) -> None:
-        self._last_ops = store.disk.stats.ops
-        pool = store.device_pool
-        self._last = dict(pool.stats()) if pool is not None else None
-
-    def observe(self, service) -> MemoryPlan | None:
-        store = service.store
-        pool = store.device_pool
-        if pool is None:
-            return None
-        ops = store.disk.stats.ops
-        if ops - self._last_ops < self.ops_cycle:
-            return None
-        self._last_ops = ops
-        st = pool.stats()
-        prev = self._last or {k: 0 for k in st}
-        self._last = dict(st)
-        d_hit = st["tier_hits"] - prev.get("tier_hits", 0)
-        d_miss = st["tier_misses"] - prev.get("tier_misses", 0)
-        budget = pool.budget_bytes
-        if d_miss > d_hit:
-            new = min(self.max_bytes, max(2 * budget, self.min_bytes))
-        elif d_hit and st["resident_pages"] < st["capacity_pages"] // 2:
-            new = max(self.min_bytes, budget // 2)
-        else:
-            return None
-        if new == budget:
-            return None
-        rec = {"budget": budget, "budget_next": new,
-               "tier_hits": d_hit, "tier_misses": d_miss,
-               "resident_pages": st["resident_pages"]}
-        self.records.append(rec)
-        return MemoryPlan(device_pool_bytes=new,
-                          note=f"device-pool:{new}")

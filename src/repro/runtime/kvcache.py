@@ -53,6 +53,9 @@ class PagedKVPool:
     def __init__(self, cfg: KVPoolConfig):
         self.cfg = cfg
         self.free: list[int] = list(range(cfg.total_pages))
+        # Monotonic page-id source: region GROWTH (set_regions) mints ids
+        # that never collide with any id ever handed out before.
+        self._page_id_seq = cfg.total_pages
         self.streams: dict[str, Stream] = {}
         self.lsn = 0
         self._alloc_window: deque = deque()
@@ -75,6 +78,50 @@ class PagedKVPool:
         self.cfg.pool_pages = n
         self.prefix.resize(self.cfg.total_pages - n)
         self._enforce_pool()
+
+    def set_regions(self, pool_pages: int, prefix_pages: int) -> None:
+        """Resize the pool's TOTAL footprint (the HBM arbiter's lease
+        actuator): unlike ``set_pool_pages``, which only moves the
+        internal pool/prefix boundary, this grows or shrinks the whole
+        region to ``pool_pages + prefix_pages`` device pages.
+
+        Growth mints fresh page ids from a monotonic sequence (never
+        reusing an id that may still name a resident device page);
+        shrink flushes streams until enough free pages exist, then
+        retires ids from the free list. Shrink is clamped to what the
+        free list can yield -- live pages are never invalidated out from
+        under a stream.
+        """
+        pool_pages = max(64, int(pool_pages))
+        prefix_pages = max(64, int(prefix_pages))
+        total = pool_pages + prefix_pages
+        if total > self.cfg.total_pages:          # grow: mint fresh ids
+            grow = total - self.cfg.total_pages
+            self.free.extend(range(self._page_id_seq,
+                                   self._page_id_seq + grow))
+            self._page_id_seq += grow
+        elif total < self.cfg.total_pages:        # shrink: drain free ids
+            need = self.cfg.total_pages - total
+            guard = 0
+            while len(self.free) < need and guard < 10_000:
+                guard += 1
+                live = [s for s in self.streams.values() if s.pages]
+                if not live:
+                    break
+                self._flush_stream(self._pick_victim(), pages=1)
+            drop = min(need, len(self.free))
+            if drop:
+                del self.free[:drop]
+            total = self.cfg.total_pages - drop
+            pool_pages = min(pool_pages, total - 64)
+        self.cfg.total_pages = total
+        self.cfg.pool_pages = int(np.clip(pool_pages, 64, total - 64))
+        self.prefix.resize(total - self.cfg.pool_pages)
+        self._enforce_pool()
+
+    @property
+    def total_pages(self) -> int:
+        return self.cfg.total_pages
 
     # -- stream management -----------------------------------------------------
     def stream(self, name: str) -> Stream:
