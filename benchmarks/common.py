@@ -212,6 +212,14 @@ def measure(store, fn) -> dict:
         # fused -> ~1.0; cross-tier fused -> the whole store per launch).
         "fused_launches": d.fused_launches,
         "fused_tiers_per_launch": d.fused_tiers / max(1, d.fused_launches),
+        # Overlapped maintenance & durability: prepares consumed from the
+        # worker pool (and the off-thread compute time they covered),
+        # foreground time blocked on the async durability worker, and
+        # proactive pacer flush slices over the window.
+        "bg_segments": d.bg_segments,
+        "bg_overlap_us": d.bg_overlap_us,
+        "fsync_wait_us": d.fsync_wait_us,
+        "flush_slices": d.flush_slices,
     }
     if service is not None:
         out["p50_us"] = d.lat_p50_us

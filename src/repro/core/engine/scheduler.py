@@ -195,6 +195,38 @@ class SegmentedScheduler:
         arena.wal.commit()
         return rep
 
+    # -- background prepare (engine/workers.py) -------------------------------
+    def _merge_candidates(self):
+        """``(debt, store, tree)`` triples with positive merge debt --
+        the prefetcher's ranking input (subclasses provide it)."""
+        raise NotImplementedError
+
+    def prefetch_merges(self, limit: int | None = None) -> int:
+        """Speculatively submit the next merge computations to the
+        arena's worker pool, largest debt first (up to ``limit`` jobs,
+        default one per worker). Entirely side-effect-free with respect
+        to store state: prepares are pure and consumed only when the
+        apply step derives the identical input key, so replay -- which
+        never prefetches -- recomputes inline bit-identically. Returns
+        the number of jobs submitted (0 with workers off)."""
+        pool = getattr(self._arena(), "workers", None)
+        if pool is None or not pool.enabled:
+            return 0
+        if limit is None:
+            limit = pool.workers
+        n = 0
+        for _, s, t in sorted(self._merge_candidates(),
+                              key=lambda c: -c[0]):
+            pv = t.preview_merge(s._tree_share(t))
+            if pv is None:
+                continue
+            key, runs = pv
+            if pool.submit(key, lambda b=t.backend, r=runs: b.merge_runs(r)):
+                n += 1
+            if n >= limit:
+                break
+        return n
+
     def tick(self, *, merge_budget=_UNSET) -> TickReport:
         """One stop-the-world maintenance round: all five segments in
         canonical order under ONE ``TickRecord``. ``merge_budget``
@@ -313,6 +345,20 @@ class MaintenanceScheduler(SegmentedScheduler):
             flushes += 1
             if freed == 0:
                 break
+        # Paced flush slice: below the hard threshold but above the
+        # proactive one, release ONE partial flush so memory pressure is
+        # paid down in slices instead of a stop-the-world burst at the
+        # threshold. Pure function of store state + config (never of
+        # pacer state), so the logged "mem" segment replays it.
+        thr = cfg.pacer_flush_threshold
+        if thr is not None and flushes == 0 \
+                and s.write_memory_used() > thr * s.write_memory_bytes:
+            t = self.pick_flush_tree()
+            if t is not None:
+                self.flush_tree(t, trigger="mem",
+                                forced_kind=cfg.forced_flush_kind)
+                flushes += 1
+                s.disk.stats.flush_slices += 1
         return flushes
 
     def _enforce_log(self) -> int:
@@ -345,6 +391,7 @@ class MaintenanceScheduler(SegmentedScheduler):
         structures or share, so the cached ranking stays exact -- and a
         sequence of bounded slices serves exactly the step sequence one
         draining pass would."""
+        self.prefetch_merges()
         s = self.store
         steps = 0
         debts = {t.name: t.merge_debt(s._tree_share(t))
@@ -364,6 +411,15 @@ class MaintenanceScheduler(SegmentedScheduler):
                 debts[name] = 0
         self.carried_debt = sum(debts.values())
         return steps
+
+    def _merge_candidates(self):
+        s = self.store
+        out = []
+        for t in s.trees.values():
+            d = t.merge_debt(s._tree_share(t))
+            if d > 0:
+                out.append((d, s, t))
+        return out
 
 
 class ShardedMaintenanceScheduler(SegmentedScheduler):
@@ -476,6 +532,17 @@ class ShardedMaintenanceScheduler(SegmentedScheduler):
             flushes += 1
             if freed == 0:
                 break
+        # Paced flush slice (global twin; see MaintenanceScheduler).
+        thr = cfg.pacer_flush_threshold
+        if thr is not None and flushes == 0 \
+                and self._used() > thr * self.arena.write_memory_bytes:
+            pick = self.pick_flush_victim()
+            if pick is not None:
+                s, t = pick
+                s.scheduler.flush_tree(t, trigger="mem",
+                                       forced_kind=cfg.forced_flush_kind)
+                flushes += 1
+                self.arena.disk.stats.flush_slices += 1
         return flushes
 
     def _enforce_log(self) -> int:
@@ -503,6 +570,7 @@ class ShardedMaintenanceScheduler(SegmentedScheduler):
     def _run_merges(self, budget: int | None) -> int:
         """Largest-debt-first allocation of maintenance units across every
         (shard, tree); unspent debt carries to the next tick."""
+        self.prefetch_merges()
         steps = 0
         owners: dict = {}
         debts: dict = {}
@@ -525,3 +593,12 @@ class ShardedMaintenanceScheduler(SegmentedScheduler):
                 debts[k] = 0
         self.carried_debt = sum(debts.values())
         return steps
+
+    def _merge_candidates(self):
+        out = []
+        for s in self.stores:
+            for t in s.trees.values():
+                d = t.merge_debt(s._tree_share(t))
+                if d > 0:
+                    out.append((d, s, t))
+        return out

@@ -50,6 +50,13 @@ class MemoryArena:
         # execution backend -- and shared by every shard after that.
         # Residency is derived state, so it is never checkpointed.
         self.device_pool = None
+        # Background maintenance workers (engine/workers.py), shared by
+        # every member store: speculative prepares of merge/Bloom compute.
+        # With maintenance_workers=0 (default) the pool is inert -- no
+        # threads exist and every compute runs inline, bit-identically.
+        from ..engine.workers import MaintenanceWorkerPool
+        self.workers = MaintenanceWorkerPool(
+            getattr(cfg, "maintenance_workers", 0), stats=self.disk.stats)
         # Durability plane: adopted (recovery) or fresh. The manifest's
         # identity guardrail rejects a config that contradicts the one the
         # durable state was written under. The StorageMedium seam lives

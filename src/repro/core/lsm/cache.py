@@ -56,6 +56,19 @@ class IOStats:
     max_stall_us: float = 0.0       # the service's LatencyHistogram deltas
                                     # (max_stall = longest maintenance
                                     # pause inside one submit/drain call)
+    bg_segments: int = 0            # maintenance prepare units (merge
+                                    # sort/dedup, Bloom builds) consumed
+                                    # from a background worker instead of
+                                    # computed inline (0 with workers off)
+    bg_overlap_us: float = 0.0      # worker compute time those consumed
+                                    # units took off the foreground path
+    fsync_wait_us: float = 0.0      # foreground time blocked on WAL
+                                    # durability: inline fsyncs when
+                                    # blocking, only the seal/sync
+                                    # barrier waits when async
+    flush_slices: int = 0           # proactive paced partial flushes
+                                    # released below the hard memory
+                                    # threshold (pacer_flush_threshold)
 
     def copy(self) -> "IOStats":
         return IOStats(**vars(self))

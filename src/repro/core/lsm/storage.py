@@ -126,6 +126,25 @@ class StoreConfig:
     # ``pacer_interval_bytes`` of ingested payload. None = pacing off.
     pacer_interval_bytes: int | None = None
     pacer_segment_budget: int = 8
+    # Paced partial-flush slices: with a threshold set, every "mem"
+    # segment releases at most ONE extra partial flush once shared write
+    # memory crosses threshold * write_memory_bytes -- BELOW the hard
+    # mem_flush_threshold -- so a paced schedule drains memory in bounded
+    # chunks instead of a burst of flushes at the hard bound. The decision
+    # reads only store state + config (never pacer state), so segments
+    # stay replay-deterministic. None = off (bit-identical to before).
+    pacer_flush_threshold: float | None = None
+    # StallGovernor (core/service/governor.py): auto-nudge the pacer's
+    # interval/budget knobs from the observed stall histogram (deadband +
+    # dwell). Requires pacing to be on.
+    pacer_autotune: bool = False
+    # Background maintenance workers (engine/workers.py): threads running
+    # the compute-heavy, side-effect-free part of merge slices (run
+    # sort/dedup, Bloom builds) speculatively off the foreground path.
+    # All side effects still commit inline at the logged segment
+    # boundaries, so store state is bit-identical for ANY worker count;
+    # 0 (default) creates no threads at all.
+    maintenance_workers: int = 0
     # Physical storage plane (core/storage_io): "memory" keeps the WAL /
     # SSTables as byte-accounted RAM buffers (every existing trajectory
     # bit-identical); "files" backs them with real files under
@@ -143,6 +162,15 @@ class StoreConfig:
     wal_segment_bytes: int = 1 << 20
     group_commit_bytes: int = 64 << 10
     group_commit_max_wait_s: float = 1e-3
+    # Async group commit (files medium, fsync_policy="group" only): a
+    # durability worker thread owns the physical write+fsync, the leader
+    # hands the pending frames off and keeps buffering the next commit
+    # group in userspace. Acks still flip durable only on a COMPLETED
+    # fsync (WriteAck.durable / sync() semantics unchanged); the worker
+    # additionally honors group_commit_max_wait_s on its own timer, so a
+    # queued commit's durability no longer waits for the next foreground
+    # commit call to notice its age.
+    wal_async_fsync: bool = False
     time_model: TimeModel = field(default_factory=TimeModel)
 
     def validate(self):
@@ -196,6 +224,27 @@ class StoreConfig:
             raise ValueError(
                 f"pacer_segment_budget must be positive (merge steps per "
                 f"paced slice), got {self.pacer_segment_budget}")
+        if self.pacer_flush_threshold is not None \
+                and not 0.0 < self.pacer_flush_threshold < 1.0:
+            raise ValueError(
+                f"pacer_flush_threshold must be in (0, 1) -- the fraction "
+                f"of write memory at which paced partial-flush slices "
+                f"start, below mem_flush_threshold -- or None to disable "
+                f"flush slices, got {self.pacer_flush_threshold}")
+        if self.pacer_autotune and self.pacer_interval_bytes is None:
+            raise ValueError(
+                f"pacer_autotune requires paced maintenance: set "
+                f"pacer_interval_bytes (got pacer_interval_bytes="
+                f"{self.pacer_interval_bytes})")
+        if self.maintenance_workers < 0:
+            raise ValueError(
+                f"maintenance_workers must be >= 0 (0 runs all maintenance "
+                f"inline), got {self.maintenance_workers}")
+        if self.wal_async_fsync and self.fsync_policy != "group":
+            raise ValueError(
+                f"wal_async_fsync requires fsync_policy='group' (the "
+                f"durability worker batches group commits), got "
+                f"fsync_policy={self.fsync_policy!r}")
         if self.storage_medium not in STORAGE_MEDIA:
             raise ValueError(
                 f"unknown storage_medium {self.storage_medium!r}; "
@@ -285,7 +334,8 @@ class LSMStore:
             dynamic_levels=cfg.dynamic_levels,
             static_num_levels=cfg.static_num_levels,
             backend=self.backend, fused_scope=cfg.fused_scope,
-            manifest=self.arena.manifest, shard_id=self.shard_id)
+            manifest=self.arena.manifest, shard_id=self.shard_id,
+            workers=self.arena.workers)
         self.trees[name] = tree
         # Schema record: one TreeCreate per logical tree (the WAL dedups
         # the per-shard creates of a sharded store).

@@ -37,7 +37,8 @@ import numpy as np
 from ...runtime.latency import LatencyHistogram
 from ..engine.pacer import MaintenancePacer
 from ..lsm.storage import LSMStore, POLICIES, StoreConfig
-from .governor import MemoryGovernor, MemoryPlan, StaticGovernor
+from .governor import MemoryGovernor, MemoryPlan, StallGovernor, \
+    StaticGovernor
 from .planner import PlanStep, build_plan
 from .requests import (Deferred, Delete, Get, GetResult, Put, Result,
                        ScanResult, WriteAck)
@@ -136,6 +137,12 @@ class StorageService:
                 store.scheduler,
                 segment_budget=cfg.pacer_segment_budget,
                 interval_bytes=cfg.pacer_interval_bytes)
+        # Pacer autotune rides beside the memory governor (it owns a
+        # different actuator -- the live pacer's knobs -- so the two never
+        # fight over a plan field).
+        self.stall_governor = None
+        if getattr(cfg, "pacer_autotune", False) and self.pacer is not None:
+            self.stall_governor = StallGovernor()
 
     @classmethod
     def open(cls, store_cfg: StoreConfig, **kw) -> "StorageService":
@@ -369,6 +376,10 @@ class StorageService:
         mem_plan = self.governor.observe(self)
         if mem_plan is not None:
             self._apply_plan(mem_plan)
+        if self.stall_governor is not None:
+            pace_plan = self.stall_governor.observe(self)
+            if pace_plan is not None:
+                self._apply_plan(pace_plan)
         self.latency.record((time.perf_counter() - t0) * 1e6,
                             n=plan.n_requests)
         return results
@@ -454,6 +465,13 @@ class StorageService:
                 and s.device_pool is not None \
                 and plan.device_pool_bytes != s.device_pool.budget_bytes:
             s.set_device_pool_bytes(plan.device_pool_bytes)
+        if self.pacer is not None:
+            # Live-pacer knobs only: StoreConfig keeps the configured
+            # values, so recovery re-paces from configuration.
+            if plan.pacer_interval_bytes is not None:
+                self.pacer.interval_bytes = int(plan.pacer_interval_bytes)
+            if plan.pacer_segment_budget is not None:
+                self.pacer.segment_budget = int(plan.pacer_segment_budget)
         self.plans.append(plan)
         if len(self.plans) > 256:
             del self.plans[:-256]

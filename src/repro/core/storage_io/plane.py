@@ -36,7 +36,8 @@ def _wal_kwargs(cfg) -> dict:
     return {"segment_bytes": cfg.wal_segment_bytes,
             "fsync_policy": cfg.fsync_policy,
             "group_bytes": cfg.group_commit_bytes,
-            "group_max_wait_s": cfg.group_commit_max_wait_s}
+            "group_max_wait_s": cfg.group_commit_max_wait_s,
+            "async_fsync": getattr(cfg, "wal_async_fsync", False)}
 
 
 def create_plane(cfg) -> tuple[FileWAL, FileManifest]:

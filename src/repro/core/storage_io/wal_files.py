@@ -29,6 +29,21 @@ the log physical:
     every queued commit, and each queued commit's wait is recorded in
     ``commit_hist`` (a ``LatencyHistogram``, microseconds) -- the
     ``commit_p99_us`` / ``fsyncs_per_kop`` BENCH columns read these.
+  * **Async group commit** (``async_fsync=True``, ``group`` policy only):
+    the leader no longer fsyncs on the foreground thread -- it hands the
+    pending frames to a durability worker and returns, overlapping the
+    next commit group's userspace buffering with the fsync in flight.
+    Acks are unchanged: a commit's latency is recorded (and its ops
+    counted durable) only when the fsync covering its head LSN completes,
+    and ``all_durable`` stays False while a handoff is in flight. The
+    worker additionally honors ``group_max_wait_s`` on its own timer, so
+    a queued commit's durability no longer waits for the *next*
+    foreground commit call to notice its age. ``IOStats.fsync_wait_us``
+    counts foreground microseconds blocked on WAL durability in BOTH
+    modes -- whole inline fsyncs when blocking, only the residual
+    barrier waits (segment seal, ``sync()``, close) when async -- so at
+    equal fsync rate the async mode's drop in that counter is the
+    foreground time the handoff reclaimed.
 
 Reopen (``FileWAL.open``) rescans the segments oldest-first, skipping
 frames below the retained minimum; a torn tail is tolerated -- and
@@ -42,6 +57,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 
 from ...runtime.latency import LatencyHistogram
@@ -63,16 +79,21 @@ class FileWAL(WriteAheadLog):
     def __init__(self, root: str, *, segment_bytes: int = 1 << 20,
                  fsync_policy: str = "per_batch",
                  group_bytes: int = 64 << 10,
-                 group_max_wait_s: float = 1e-3):
+                 group_max_wait_s: float = 1e-3,
+                 async_fsync: bool = False):
         if fsync_policy not in FSYNC_POLICIES:
             raise ValueError(f"unknown fsync_policy {fsync_policy!r}; "
                              f"expected one of {FSYNC_POLICIES}")
+        if async_fsync and fsync_policy != "group":
+            raise ValueError(f"async_fsync requires fsync_policy='group', "
+                             f"got {fsync_policy!r}")
         super().__init__()
         self.root = root
         self.segment_bytes = int(segment_bytes)
         self.fsync_policy = fsync_policy
         self.group_bytes = int(group_bytes)
         self.group_max_wait_s = float(group_max_wait_s)
+        self.async_fsync = bool(async_fsync)
         self.fsyncs = 0
         self.commit_hist = LatencyHistogram()
         self._stats = None
@@ -82,13 +103,27 @@ class FileWAL(WriteAheadLog):
         self._pending: list[bytes] = []    # frames not yet written to the OS
         self._pending_bytes = 0
         self._pending_t0 = 0.0             # age of the oldest pending frame
-        self._commit_q: list[tuple[float, int]] = []   # (enqueue time, n ops)
+        # (enqueue time, n ops, head LSN the commit needs durable)
+        self._commit_q: list[tuple[float, int, int]] = []
         self._segments: list[tuple[str, int]] = []     # sealed: (path, last seq)
         self._f = None
         self._seg_index = -1
         self._seg_path = ""
         self._seg_bytes = 0
         self._seg_last_seq = -1
+        # Async durability worker state. The condition guards _pending,
+        # _commit_q, _handoff, _unfsynced and _durable_lsn whenever the
+        # worker exists; with async_fsync off the lock is uncontended.
+        self._dcv = threading.Condition()
+        self._handoff: list[tuple[object, bytes, int]] = []  # (file, buf, head)
+        self._unfsynced = 0            # handoffs not yet fsynced
+        self._dclosed = False
+        self._dthread = None
+        if self.async_fsync:
+            self._dthread = threading.Thread(
+                target=self._durability_worker, daemon=True,
+                name="wal-fsync")
+            self._dthread.start()
 
     # -- construction ----------------------------------------------------------
     @classmethod
@@ -185,21 +220,101 @@ class FileWAL(WriteAheadLog):
     def _fsync_now(self) -> None:
         """Write every pending frame and fsync; drain the commit queue
         into the latency histogram (ONE fsync serves all queued commits:
-        leader-follower group commit)."""
+        leader-follower group commit). In async mode this is the
+        *barrier* form: hand everything to the durability worker and
+        block until it has fsynced (seal/sync/close call sites)."""
+        if self._dthread is not None:
+            self._wait_durable()
+            return
         if self._pending:
+            t0 = time.perf_counter()
             self._f.write(b"".join(self._pending))
             os.fsync(self._f.fileno())
             self.fsyncs += 1
             if self._stats is not None:
                 self._stats.fsyncs += 1
+                # foreground time blocked on WAL durability: the whole
+                # inline fsync here; only the residual barrier waits in
+                # async mode -- the same counter, so the two modes'
+                # foreground durability cost compares directly.
+                self._stats.fsync_wait_us += (time.perf_counter() - t0) * 1e6
             self._pending.clear()
             self._pending_bytes = 0
             self._durable_lsn = self._head
         if self._commit_q:
             t1 = time.perf_counter()
-            for t0, n in self._commit_q:
+            for t0, n, _ in self._commit_q:
                 self.commit_hist.record(max((t1 - t0) * 1e6, 1e-3), n=n)
             self._commit_q.clear()
+
+    # -- async durability worker -------------------------------------------------
+    def _handoff_locked(self) -> None:
+        """Move the pending frames to the worker's queue (caller holds
+        ``_dcv``). Captures the current segment file: a seal drains the
+        worker first, so at most one file is ever in flight."""
+        if not self._pending:
+            return
+        self._handoff.append((self._f, b"".join(self._pending), self._head))
+        self._unfsynced += 1
+        self._pending.clear()
+        self._pending_bytes = 0
+        self._dcv.notify_all()
+
+    def _wait_durable(self) -> None:
+        """Foreground barrier: hand off anything pending and block until
+        the worker has fsynced every handoff. The blocked time is the
+        async mode's residual foreground cost (``fsync_wait_us``)."""
+        t0 = time.perf_counter()
+        waited = False
+        with self._dcv:
+            self._handoff_locked()
+            while self._unfsynced:
+                waited = True
+                self._dcv.wait()
+        if waited and self._stats is not None:
+            self._stats.fsync_wait_us += (time.perf_counter() - t0) * 1e6
+
+    def _durability_worker(self) -> None:
+        while True:
+            with self._dcv:
+                while not self._handoff:
+                    if self._dclosed:
+                        if not self._pending:
+                            return
+                        self._handoff_locked()
+                        break
+                    if self._pending:
+                        # Honor group_max_wait_s on our own clock: a
+                        # queued commit's durability must not wait for
+                        # the next foreground commit to notice its age.
+                        left = self.group_max_wait_s \
+                            - (time.perf_counter() - self._pending_t0)
+                        if left <= 0:
+                            self._handoff_locked()
+                            break
+                        self._dcv.wait(timeout=left)
+                    else:
+                        self._dcv.wait()
+                f, buf, head = self._handoff.pop(0)
+            f.write(buf)
+            os.fsync(f.fileno())
+            t1 = time.perf_counter()
+            with self._dcv:
+                self.fsyncs += 1
+                if self._stats is not None:
+                    self._stats.fsyncs += 1
+                if head > self._durable_lsn:
+                    self._durable_lsn = head
+                keep = []
+                for t0, n, lsn in self._commit_q:
+                    if lsn <= self._durable_lsn:
+                        self.commit_hist.record(
+                            max((t1 - t0) * 1e6, 1e-3), n=n)
+                    else:
+                        keep.append((t0, n, lsn))
+                self._commit_q = keep
+                self._unfsynced -= 1
+                self._dcv.notify_all()
 
     # -- appends (one override: every record becomes a pending frame) -----------
     def _push(self, rec) -> None:
@@ -208,14 +323,15 @@ class FileWAL(WriteAheadLog):
         frame = build_frame(seq, self._records[-1].buf)
         if self._seg_bytes and self._seg_bytes + len(frame) > self.segment_bytes:
             self._seal_segment()
-        if not self._pending:
-            self._pending_t0 = time.perf_counter()
-        self._pending.append(frame)
-        self._pending_bytes += len(frame)
+        with self._dcv:           # the async worker reads/steals _pending
+            if not self._pending:
+                self._pending_t0 = time.perf_counter()
+            self._pending.append(frame)
+            self._pending_bytes += len(frame)
         self._seg_bytes += len(frame)
         self._seg_last_seq = seq
         if self.fsync_policy == "per_record":
-            self._commit_q.append((time.perf_counter(), 1))
+            self._commit_q.append((time.perf_counter(), 1, self._head))
             self._fsync_now()
 
     # -- durability -------------------------------------------------------------
@@ -225,19 +341,35 @@ class FileWAL(WriteAheadLog):
 
     @property
     def all_durable(self) -> bool:
-        return not self._pending
+        return not self._pending and self._unfsynced == 0
 
     def commit(self, n: int = 1) -> None:
         """A commit point: ``n`` logical ops want durability here. Under
         ``per_batch`` this fsyncs now; under ``group`` it queues behind
         the interval/age thresholds (the commit that trips one becomes
-        the leader and fsyncs for the whole queue)."""
+        the leader and fsyncs for the whole queue). With ``async_fsync``
+        the leader hands the group to the durability worker instead of
+        fsyncing inline -- the commit's ack (histogram entry, durable op
+        count) still lands only when its covering fsync completes."""
         if self._replay is not None or self.fsync_policy == "per_record":
+            return
+        now = time.perf_counter()
+        if self._dthread is not None:
+            with self._dcv:
+                if not self._pending and self._unfsynced == 0:
+                    return
+                self._commit_q.append((now, max(1, int(n)), self._head))
+                # Same group-closing rule as the blocking leader (bytes
+                # or age) -- just a handoff instead of an inline fsync.
+                # The worker's own timer covers the case blocking mode
+                # cannot: an aging group with no further commit calls.
+                if self._pending_bytes >= self.group_bytes \
+                        or now - self._pending_t0 >= self.group_max_wait_s:
+                    self._handoff_locked()
             return
         if not self._pending:
             return
-        now = time.perf_counter()
-        self._commit_q.append((now, max(1, int(n))))
+        self._commit_q.append((now, max(1, int(n)), self._head))
         if self.fsync_policy == "per_batch" \
                 or self._pending_bytes >= self.group_bytes \
                 or now - self._pending_t0 >= self.group_max_wait_s:
@@ -245,11 +377,17 @@ class FileWAL(WriteAheadLog):
 
     def sync(self) -> None:
         """Force everything durable now (shutdown, tests, benchmarks)."""
-        if self._pending or self._commit_q:
+        if self._pending or self._commit_q or self._unfsynced:
             self._fsync_now()
 
     def close(self) -> None:
         self.sync()
+        if self._dthread is not None:
+            with self._dcv:
+                self._dclosed = True
+                self._dcv.notify_all()
+            self._dthread.join(timeout=5.0)
+            self._dthread = None
         if self._f is not None:
             self._f.close()
             self._f = None

@@ -103,6 +103,13 @@ class LatencyHistogram:
         """Exact maximum recorded value (0.0 when empty)."""
         return self._max if self.count else 0.0
 
+    def summary(self) -> dict:
+        """The standard BENCH/governor view of this histogram: exact
+        count/min/max plus the bounded-error quantile ladder."""
+        return {"count": self.count, "p50": self.p50, "p99": self.p99,
+                "p999": self.p999, "min": self.min_value,
+                "max": self.max_value}
+
     # -- composition -----------------------------------------------------------
     def _compatible(self, other: "LatencyHistogram") -> None:
         if (self.gamma, self.v0) != (other.gamma, other.v0):

@@ -25,6 +25,8 @@ def main() -> int:
     ap.add_argument("--kill-at", type=int, required=True)
     ap.add_argument("--policy", default="per_batch")
     ap.add_argument("--mode", default="full")
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--async-fsync", action="store_true")
     args = ap.parse_args()
 
     from repro.core.lsm.sstable import reset_sst_ids
@@ -32,7 +34,8 @@ def main() -> int:
 
     reset_sst_ids()
     cfg = kill_config(args.shards, medium="files", root=args.root,
-                      fsync_policy=args.policy, mode=args.mode)
+                      fsync_policy=args.policy, mode=args.mode,
+                      workers=args.workers, wal_async=args.async_fsync)
     store = ShardedStore(cfg, shards=args.shards)
 
     def on_boundary(i):

@@ -34,7 +34,8 @@ N_BOUNDARIES = N_BATCHES * (1 + len(SEGMENTS))
 
 def kill_config(shards: int, *, medium: str, root=None,
                 fsync_policy: str = "per_batch",
-                mode: str = "full") -> StoreConfig:
+                mode: str = "full", workers: int = 0,
+                wal_async: bool = False) -> StoreConfig:
     """Config small enough that the drive() workload crosses every
     interesting durability edge: 8 KB WAL segments (many rollovers),
     512 KB log cap (truncation + min-LSN flushes), 256 KB checkpoint
@@ -50,7 +51,8 @@ def kill_config(shards: int, *, medium: str, root=None,
         fsync_policy=fsync_policy, wal_segment_bytes=seg,
         # group mode: a large byte threshold + effectively-infinite wait
         # keeps whole commit groups buffered across kill points
-        group_commit_bytes=12 * KB, group_commit_max_wait_s=3600.0)
+        group_commit_bytes=12 * KB, group_commit_max_wait_s=3600.0,
+        maintenance_workers=workers, wal_async_fsync=wal_async)
 
 
 def drive(store, on_boundary=None, *, mode: str = "full"):

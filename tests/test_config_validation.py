@@ -44,6 +44,18 @@ CASES = [
      ["pacer_interval_bytes", "got -2"]),
     (dict(pacer_segment_budget=0),
      ["pacer_segment_budget", "got 0"]),
+    (dict(pacer_flush_threshold=0.0),
+     ["pacer_flush_threshold", "(0, 1)", "got 0.0"]),
+    (dict(pacer_flush_threshold=1.5),
+     ["pacer_flush_threshold", "(0, 1)", "got 1.5"]),
+    (dict(pacer_autotune=True),
+     ["pacer_autotune", "pacer_interval_bytes"]),
+    (dict(maintenance_workers=-1),
+     ["maintenance_workers", "got -1"]),
+    (dict(wal_async_fsync=True),
+     ["wal_async_fsync", "fsync_policy", "'per_batch'"]),
+    (dict(wal_async_fsync=True, fsync_policy="per_record"),
+     ["wal_async_fsync", "fsync_policy", "'per_record'"]),
     # -- physical storage plane --------------------------------------------
     (dict(storage_medium="tape"),
      ["storage_medium", "'tape'", "memory", "files"]),
@@ -91,3 +103,9 @@ def test_valid_configs_pass(tmp_path):
     # None sentinels mean "feature off", not "invalid"
     base(checkpoint_interval_bytes=None, pacer_interval_bytes=None,
          merge_budget=None).validate()
+    # overlapped-maintenance knobs in their legal combinations
+    base(maintenance_workers=4, pacer_interval_bytes=64 * KB,
+         pacer_segment_budget=2, pacer_flush_threshold=0.5,
+         pacer_autotune=True).validate()
+    base(storage_medium="files", storage_dir=str(tmp_path),
+         fsync_policy="group", wal_async_fsync=True).validate()

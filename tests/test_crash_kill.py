@@ -71,14 +71,18 @@ def oracle_run(shards: int, mode: str = "full"):
     return _ORACLES[key]
 
 
-def run_child(root, *, shards, kill_at, policy="per_batch", mode="full"):
+def run_child(root, *, shards, kill_at, policy="per_batch", mode="full",
+              workers=0, wal_async=False):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC_DIR + os.pathsep + TESTS_DIR
+    argv = [sys.executable, os.path.join(TESTS_DIR, "crash_child.py"),
+            "--root", str(root), "--shards", str(shards),
+            "--kill-at", str(kill_at), "--policy", policy, "--mode", mode,
+            "--workers", str(workers)]
+    if wal_async:
+        argv.append("--async-fsync")
     proc = subprocess.run(
-        [sys.executable, os.path.join(TESTS_DIR, "crash_child.py"),
-         "--root", str(root), "--shards", str(shards),
-         "--kill-at", str(kill_at), "--policy", policy, "--mode", mode],
-        env=env, capture_output=True, text=True, timeout=300)
+        argv, env=env, capture_output=True, text=True, timeout=300)
     if kill_at < 0:
         assert proc.returncode == 0, proc.stderr
     else:
@@ -88,10 +92,11 @@ def run_child(root, *, shards, kill_at, policy="per_batch", mode="full"):
     return proc
 
 
-def recover_from(root, *, shards, policy="per_batch", mode="full"):
+def recover_from(root, *, shards, policy="per_batch", mode="full",
+                 workers=0):
     reset_sst_ids()
     cfg = kill_config(shards, medium="files", root=str(root),
-                      fsync_policy=policy, mode=mode)
+                      fsync_policy=policy, mode=mode, workers=workers)
     wal, manifest = open_plane(cfg)
     return recover(cfg, wal, manifest)
 
@@ -135,6 +140,26 @@ def test_recovered_store_keeps_working(tmp_path):
     rec.wal.sync()
     rec2 = recover_from(tmp_path, shards=1)
     assert snapshot(rec2) == post
+
+
+# ------------------------- background workers on ------------------------------
+@pytest.mark.parametrize("shards", [1, 4])
+@pytest.mark.parametrize("kill_at", KILL_POINTS if FULL else [5, 17, 23])
+def test_sigkill_with_workers_recovers_bit_identical(tmp_path, shards,
+                                                     kill_at):
+    """The prepare/apply determinism contract under real SIGKILL: a child
+    running with maintenance_workers=2 dies at a boundary, and recovery
+    (itself worker-enabled) lands on EXACTLY the workers=0 oracle state --
+    workers change when wall-clock time is spent, never what survives."""
+    run_child(tmp_path, shards=shards, kill_at=kill_at, workers=2)
+    rec = recover_from(tmp_path, shards=shards, workers=2)
+    assert snapshot(rec) == oracle_run(shards)[kill_at]
+
+
+def test_clean_shutdown_with_workers_matches_oracle(tmp_path):
+    run_child(tmp_path, shards=4, kill_at=-1, workers=2)
+    rec = recover_from(tmp_path, shards=4, workers=2)
+    assert snapshot(rec) == oracle_run(4)[-1]
 
 
 # -------------------------------- torn tail -----------------------------------
@@ -181,5 +206,44 @@ def test_group_commit_kill_lands_on_group_boundary(tmp_path, kill_at):
 
 def test_group_commit_sync_makes_all_durable(tmp_path):
     run_child(tmp_path, shards=1, kill_at=-1, policy="group", mode="group")
+    rec = recover_from(tmp_path, shards=1, policy="group", mode="group")
+    assert snapshot(rec) == oracle_run(1, mode="group")[-1]
+
+
+# ---------------------------- async group commit -------------------------------
+@pytest.mark.parametrize("kill_at", [2, 5, 9])
+def test_async_fsync_kill_lands_on_fsynced_boundary(tmp_path, kill_at):
+    """Async group commit keeps the durability INVARIANT (only fsynced
+    bytes survive; recovery lands exactly on a committed boundary, never
+    on torn state) while relaxing the freshness bound: at the kill
+    instant the loss window is the userspace group plus every handoff
+    the durability worker has not fsynced yet -- which is why acks carry
+    ``durable=False`` until the covering fsync lands, and ``sync()``
+    remains the freshness barrier (next test)."""
+    run_child(tmp_path, shards=1, kill_at=kill_at, policy="group",
+              mode="group", wal_async=True)
+    rec = recover_from(tmp_path, shards=1, policy="group", mode="group")
+    snaps = oracle_run(1, mode="group")
+    got = snapshot(rec)
+    if got["log_pos"] == 0:
+        # nothing was fsynced before the kill: a virgin store (even the
+        # tree creates were still in flight), not a torn one
+        reset_sst_ids()
+        virgin = ShardedStore(kill_config(1, medium="memory",
+                                          mode="group"), shards=1)
+        assert got == snapshot(virgin)
+        return
+    js = [j for j in range(kill_at + 1)
+          if snaps[j]["log_pos"] == got["log_pos"]]
+    assert js, (f"recovered log_pos {got['log_pos']} matches no oracle "
+                f"boundary <= {kill_at}")
+    assert got == snaps[js[-1]]
+
+
+def test_async_fsync_clean_shutdown_all_durable(tmp_path):
+    """sync() is a barrier through the durability worker: a clean child
+    exit leaves nothing behind the blocking mode's final state."""
+    run_child(tmp_path, shards=1, kill_at=-1, policy="group",
+              mode="group", wal_async=True)
     rec = recover_from(tmp_path, shards=1, policy="group", mode="group")
     assert snapshot(rec) == oracle_run(1, mode="group")[-1]

@@ -262,8 +262,9 @@ if HAVE_HYPOTHESIS:
 # ------------------------- files-vs-memory differential -----------------------
 def test_files_medium_is_state_transparent(tmp_path):
     """Same workload, both media: identical fingerprints, identical WAL
-    record streams, identical IOStats except the fsync counter (which the
-    in-memory medium never increments)."""
+    record streams, identical IOStats except the fsync counter and the
+    foreground durability-blocking clock (which the in-memory medium
+    never moves)."""
     reset_sst_ids()
     sf = ShardedStore(kill_config(2, medium="files", root=str(tmp_path)),
                       shards=2)
@@ -277,6 +278,7 @@ def test_files_medium_is_state_transparent(tmp_path):
     assert [r.seq for r in sf.wal._records] == [r.seq for r in sm.wal._records]
     vf, vm = dict(vars(sf.arena.disk.stats)), dict(vars(sm.arena.disk.stats))
     assert vf.pop("fsyncs") > 0 and vm.pop("fsyncs") == 0
+    assert vf.pop("fsync_wait_us") > 0 and vm.pop("fsync_wait_us") == 0
     assert vf == vm
     assert sf.arena.disk.page_store is not None
     assert sm.arena.disk.page_store is None
